@@ -1,0 +1,105 @@
+"""Real CPU-timed LM benchmarks: Hapi step vs baseline, kernels, splitter.
+
+These time actual jit'd computation on the reduced configs (the full
+configs are exercised via the dry-run; see benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import HapiConfig, RunConfig, ShapeConfig, TrainConfig
+from repro.configs import get_config, get_smoke_config
+from repro.core.profiler import profile_lm
+from repro.core.splitter import SplitDecision, choose_split
+from repro.core.tier_split import TierPlan
+from repro.models.api import build_model
+from repro.train.steps import (
+    build_baseline_train_step,
+    build_hapi_train_step,
+    init_train_state,
+)
+
+Row = Tuple[str, float, str]
+
+
+def _timed(f, *args, n=3):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6, out
+
+
+def bench_train_steps() -> List[Row]:
+    rows = []
+    for arch in ("qwen3-32b", "mamba2-1.3b", "moonshot-v1-16b-a3b"):
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        shape = ShapeConfig("t", "train", 64, 8)
+        rc = RunConfig(model=cfg, shape=shape,
+                       train=TrainConfig(microbatch=4))
+        plan = TierPlan(1, 4, False, SplitDecision(1, 0, 0, [], "b"))
+        state = init_train_state(model, rc, plan, jax.random.PRNGKey(0))
+        batch = {
+            "tokens": jnp.ones((8, 64), jnp.int32),
+            "labels": jnp.ones((8, 64), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            continue
+        hapi_step = jax.jit(build_hapi_train_step(model, rc, plan))
+        base_step = jax.jit(build_baseline_train_step(model, rc, plan.split))
+        us_h, _ = _timed(hapi_step, state, batch)
+        us_b, _ = _timed(base_step, state, batch)
+        rows.append((f"lm_step.{arch}.hapi", us_h, f"microbatched_cos=4"))
+        rows.append((f"lm_step.{arch}.baseline", us_b,
+                     f"relative={us_h/us_b:.2f}"))
+    return rows
+
+
+def bench_kernels() -> List[Row]:
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    rows = []
+    b, s, h, hd = 1, 512, 4, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd))
+    k, v = q + 0.1, q - 0.1
+    us_ref, _ = _timed(jax.jit(
+        lambda a, b_, c: ref.flash_attention(a, b_, c, causal=True)), q, k, v)
+    rows.append(("kernel.flash_ref_xla", us_ref, f"s={s}"))
+    # interpret-mode pallas is a correctness artifact, not a perf number —
+    # report it anyway for completeness (TPU lowering is the target).
+    t0 = time.time()
+    flash_attention_pallas(q, k, v, causal=True, q_block=128, kv_block=128,
+                           interpret=True)
+    rows.append(("kernel.flash_pallas_interpret", (time.time() - t0) * 1e6,
+                 "correctness_path"))
+    return rows
+
+
+def bench_splitter() -> List[Row]:
+    """Splitting decision latency (paper: once per application, must be cheap)."""
+    cfg = get_config("qwen1.5-110b")
+    t0 = time.time()
+    prof = profile_lm(cfg, 4096)
+    t_prof = (time.time() - t0) * 1e6
+    t0 = time.time()
+    for _ in range(100):
+        choose_split(prof, HapiConfig(), 256)
+    t_split = (time.time() - t0) / 100 * 1e6
+    return [("splitter.profile_110b", t_prof, "analytic, no allocation"),
+            ("splitter.choose_split", t_split, "per application")]
+
+
+ALL_LM = {
+    "lm_steps": bench_train_steps,
+    "kernels": bench_kernels,
+    "splitter": bench_splitter,
+}

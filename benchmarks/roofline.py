@@ -1,0 +1,84 @@
+"""Roofline table (deliverable g): read the dry-run artifacts and print the
+three-term roofline per (arch x shape x mesh) with MODEL_FLOPS ratios.
+
+Run the sweeps first (they need 256/512 fake host devices, so they live in
+separate processes):
+
+    PYTHONPATH=src REPRO_DRYRUN_DEVICES=256 python -m repro.launch.dryrun \
+        --all --json experiments/dryrun_single_pod.json
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod \
+        --json experiments/dryrun_multi_pod.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def _load(name):
+    path = os.path.join(EXP_DIR, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_table() -> List[Row]:
+    rows: List[Row] = []
+    t0 = time.time()
+    for fname, tag in (("dryrun_single_pod.json", "1pod"),
+                       ("dryrun_multi_pod.json", "2pod")):
+        data = _load(fname)
+        if data is None:
+            rows.append((f"roofline.{tag}.missing", 0.0,
+                         f"run the dry-run sweep first ({fname})"))
+            continue
+        for r in data:
+            name = f"roofline.{tag}.{r['arch']}.{r['shape']}"
+            if r["status"] == "skip":
+                rows.append((name, 0.0, "skip:" + r["reason"][:40]))
+                continue
+            if r["status"] != "ok":
+                rows.append((name, 0.0, "FAIL"))
+                continue
+            t = r["roofline"]
+            rows.append((
+                name,
+                (time.time() - t0) * 1e6,
+                f"comp_s={t['compute_s']:.4f};mem_s={t['memory_s']:.4f};"
+                f"coll_s={t['collective_s']:.4f};dom={r['dominant'][:-2]};"
+                f"useful_6nd={r.get('useful_ratio_6nd', 0):.2f};"
+                f"useful_step={r.get('useful_ratio_step', 0):.2f};"
+                f"temp_GB={r['memory_analysis'].get('temp_size_in_bytes', 0)/1e9:.1f}",
+            ))
+    return rows
+
+
+def tier_table() -> List[Row]:
+    rows: List[Row] = []
+    data = _load("tier_dryrun.json")
+    if data is None:
+        return [("tier.missing", 0.0, "run repro.launch.tierdry --all first")]
+    for r in data:
+        if r.get("status") != "ok":
+            rows.append((f"tier.{r.get('arch','?')}", 0.0, "FAIL"))
+            continue
+        tag = "int8" if r["compress"] else "bf16"
+        rows.append((
+            f"tier.{r['arch']}.{tag}", 0.0,
+            f"split={r['split']};wire_GB={r['wire_bytes_per_step']/1e9:.2f};"
+            f"wire_s={r['wire_s']:.4f};"
+            f"storage_max_s={max(r['storage']['roofline'].values()):.3f};"
+            f"compute_max_s={max(r['compute']['roofline'].values()):.3f};"
+            f"bottleneck={r['bottleneck']}",
+        ))
+    return rows
+
+
+ALL_ROOFLINE = {"roofline": roofline_table, "tier": tier_table}

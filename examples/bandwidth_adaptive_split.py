@@ -1,0 +1,34 @@
+"""The split index adapting to network bandwidth (paper §7.4, Table 4).
+
+    PYTHONPATH=src python examples/bandwidth_adaptive_split.py
+
+Sweeps the COS<->compute bandwidth and shows Algorithm 1 moving the split:
+scarce bandwidth -> late split (small activations), abundant bandwidth ->
+early split (saves COS compute). Also shows the beyond-paper int8 boundary
+compression halving the wire bytes and the cost-optimal splitter.
+"""
+from repro.config import HapiConfig
+from repro.core.profiler import profile_layered
+from repro.core.splitter import choose_split, choose_split_cost_optimal
+from repro.models.vision import alexnet
+
+
+def main():
+    prof = profile_layered(alexnet(1000))
+    print(f"{'bw':>8} | {'paper split':>11} | {'wire MB/iter':>12} | "
+          f"{'int8 split':>10} | {'cost-opt':>8}")
+    for gbps in (0.05, 0.1, 0.5, 1, 2, 3, 5, 10, 12):
+        bw = gbps * 1e9 / 8
+        d = choose_split(prof, HapiConfig(network_bandwidth=bw), 8000)
+        dc = choose_split(prof, HapiConfig(network_bandwidth=bw,
+                                           compress_transfer=True), 8000)
+        do = choose_split_cost_optimal(
+            prof, HapiConfig(network_bandwidth=bw), 8000,
+            cos_flops=65e12, client_flops=65e12)
+        print(f"{gbps:6.2f}G | {d.split_index:11d} | "
+              f"{d.wire_bytes_per_iter/1e6:12.1f} | {dc.split_index:10d} | "
+              f"{do.split_index:8d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""End-to-end driver: fine-tune a ~100M-parameter model for a few hundred
+steps through the full stack (COS objects -> resumable pipeline -> Hapi
+tier split -> AdamW -> checkpoints).
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+The config is a 12-layer/512-wide member of the qwen3 family (~100M
+params). On CPU this takes a few minutes; the same driver runs the full
+configs on real hardware.
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch import train as train_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/hapi_100m_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-param member of the qwen3 family.
+    base = get_config("qwen3-32b")
+    cfg100m = dataclasses.replace(
+        base, n_layers=12, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=32000, vocab_pad_to=512,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    print(f"params: {cfg100m.param_count()/1e6:.1f}M")
+
+    import repro.launch.train as T
+
+    # Reuse the driver with a custom config via a tiny shim.
+    orig_get = T.get_smoke_config
+    T.get_smoke_config = lambda a: cfg100m
+    try:
+        out = T.run_training(
+            "qwen3-32b", steps=args.steps, batch=16, seq=128, smoke=True,
+            ckpt_dir=args.ckpt, ckpt_every=100, lr=3e-4, log_every=20,
+            dataset_batches=16,
+        )
+    finally:
+        T.get_smoke_config = orig_get
+    print(f"final loss: {out['final_loss']:.4f} after {out['steps']} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Sharded, atomic, resumable checkpoints (no external deps).
+
+Layout:  <dir>/step_<N>/
+            manifest.json        — tree structure, dtypes, shapes, pipeline
+                                   cursor, step, completeness marker
+            shard_<i>.npz        — flattened leaves, split round-robin
+
+Writes go to ``step_<N>.tmp`` and are atomically renamed — a crash
+mid-write never corrupts the latest checkpoint (restore picks the newest
+*complete* step). ``keep`` bounds disk usage (GC of old steps).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve extended dtypes (bfloat16, float8_*) via ml_dtypes."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode(leaf: np.ndarray) -> np.ndarray:
+    """npz cannot store ml_dtypes natively — store raw bytes."""
+    return np.frombuffer(np.ascontiguousarray(leaf).tobytes(), np.uint8)
+
+
+def _decode(raw: np.ndarray, dtype: str, shape) -> np.ndarray:
+    return np.frombuffer(raw.tobytes(), _np_dtype(dtype)).reshape(shape)
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state: Any,
+    *,
+    extra: Optional[Dict] = None,
+    n_shards: int = 4,
+    keep: int = 3,
+) -> str:
+    leaves, treedef = _flatten(state)
+    tmp = os.path.join(directory, f"step_{step:08d}.tmp")
+    final = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+
+    shards: List[Dict[str, np.ndarray]] = [{} for _ in range(n_shards)]
+    index = []
+    for i, leaf in enumerate(leaves):
+        s = i % n_shards
+        shards[s][f"leaf_{i}"] = _encode(leaf)
+        index.append({"leaf": i, "shard": s, "shape": list(leaf.shape),
+                      "dtype": str(leaf.dtype)})
+    for s, payload in enumerate(shards):
+        np.savez(os.path.join(tmp, f"shard_{s}.npz"), **payload)
+
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "n_shards": n_shards,
+        "index": index,
+        "treedef": str(treedef),
+        "extra": extra or {},
+        "complete": True,
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic on POSIX
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    for d in os.listdir(directory):
+        if d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for d in sorted(os.listdir(directory), reverse=True):
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        mf = os.path.join(directory, d, "manifest.json")
+        try:
+            with open(mf) as f:
+                m = json.load(f)
+            if m.get("complete"):
+                best = m["step"]
+                break
+        except (OSError, json.JSONDecodeError):
+            continue  # incomplete/corrupt — skip to older
+    return best
+
+
+def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None):
+    """Restore into the structure of ``like``. Returns (state, extra, step)
+    or (None, None, None) when nothing is restorable."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        return None, None, None
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    meta = {e["leaf"]: e for e in manifest["index"]}
+    loaded: Dict[int, np.ndarray] = {}
+    for s in range(manifest["n_shards"]):
+        with np.load(os.path.join(path, f"shard_{s}.npz")) as z:
+            for k in z.files:
+                i = int(k.split("_")[1])
+                loaded[i] = _decode(z[k], meta[i]["dtype"], meta[i]["shape"])
+
+    leaves_like, treedef = jax.tree.flatten(like)
+    assert len(leaves_like) == manifest["n_leaves"], (
+        f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves_like)}"
+    )
+    leaves = [loaded[i] for i in range(manifest["n_leaves"])]
+    state = jax.tree.unflatten(treedef, leaves)
+    return state, manifest.get("extra", {}), step

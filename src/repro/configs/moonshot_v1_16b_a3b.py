@@ -1,0 +1,19 @@
+"""moonshot-v1-16b-a3b — Moonlight 16B-A3B MoE, 64 experts top-6.
+[hf:moonshotai/Moonlight-16B-A3B; hf]"""
+from repro.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="moonshot-v1-16b-a3b",
+        family="moe",
+        n_layers=48,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1408,
+        vocab_size=163840,
+        n_experts=64,
+        top_k=6,
+        rope_theta=5e4,
+    )

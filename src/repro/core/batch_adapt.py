@@ -1,0 +1,120 @@
+"""Batch adaptation (paper §5.5, Eq. 4).
+
+The COS server solves, per accelerator, the bounded knapsack
+
+    max   sum_r  b_r * M_r(data) + M_r(model)
+    s.t.  b_min <= b_r <= b_max_r   for all r
+          sum_r b_r * M_r(data) + M_r(model)  <=  M_total - M_occupied
+
+maximizing memory utilization over the queued requests while provably
+avoiding OOM. The objective is monotone in every b_r, so the exact solver
+is a water-fill: admit requests at b_min (dropping latest-first while even
+b_min does not fit — the paper retries dropped requests next round), then
+grow the smallest-fraction request in integer steps until the budget or
+every b_max is hit.
+
+Invariants (property-tested in tests/test_batch_adapt.py):
+  * total estimated memory never exceeds the budget;
+  * every admitted request has b_min <= b_r <= b_max_r;
+  * maximality: if budget remains, every admitted request is at b_max.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class AdaptRequest:
+    req_id: int
+    mem_per_sample: float       # M_r(data): bytes per batch element
+    mem_model: float            # M_r(model): bytes for weights
+    b_max: int                  # upper bound (client's training batch)
+    b_min_override: int = 0     # >0: fixed floor (non-adaptable request —
+                                # ALL_IN_COS cannot decouple its batch, §5.1)
+
+    def floor(self, b_min: int) -> int:
+        if self.b_min_override:
+            return min(self.b_min_override, self.b_max)
+        return min(b_min, self.b_max)
+
+
+@dataclass(frozen=True)
+class Assignment:
+    req_id: int
+    batch: int
+    mem: float
+
+
+@dataclass(frozen=True)
+class AdaptResult:
+    assignments: List[Assignment]
+    dropped: List[int]           # req_ids deferred to the next round
+    mem_used: float
+    budget: float
+
+    @property
+    def utilization(self) -> float:
+        return self.mem_used / self.budget if self.budget else 0.0
+
+
+def adapt_batches(
+    requests: List[AdaptRequest],
+    budget: float,
+    b_min: int = 32,
+    step: int = 8,
+) -> AdaptResult:
+    """Exact greedy water-fill solver for Eq. 4."""
+    reqs = list(requests)
+    dropped: List[int] = []
+
+    def base_cost(rs) -> float:
+        return sum(r.mem_model + r.floor(b_min) * r.mem_per_sample for r in rs)
+
+    # Admission: drop latest-arriving requests until the b_min config fits
+    # (paper: "removes one request at a time and retries").
+    while reqs and base_cost(reqs) > budget:
+        dropped.append(reqs[-1].req_id)
+        reqs = reqs[:-1]
+
+    batches = {r.req_id: r.floor(b_min) for r in reqs}
+    used = base_cost(reqs)
+
+    # Water-fill: repeatedly grow the request with the lowest fill fraction.
+    while True:
+        grew = False
+        order = sorted(
+            (r for r in reqs if batches[r.req_id] < r.b_max),
+            key=lambda r: (batches[r.req_id] / r.b_max, r.req_id),
+        )
+        for r in order:
+            inc = min(step, r.b_max - batches[r.req_id])
+            cost = inc * r.mem_per_sample
+            if used + cost <= budget:
+                batches[r.req_id] += inc
+                used += cost
+                grew = True
+                break
+        if not grew:
+            break
+
+    assignments = [
+        Assignment(r.req_id, batches[r.req_id],
+                   r.mem_model + batches[r.req_id] * r.mem_per_sample)
+        for r in reqs
+    ]
+    return AdaptResult(assignments, dropped, used, budget)
+
+
+def adaptation_stats(results: List[AdaptResult], default_batch: int) -> Tuple[float, float]:
+    """Paper Table 5: % of requests with reduced batch, average reduction %."""
+    n, reduced, total_red = 0, 0, 0.0
+    for res in results:
+        for a in res.assignments:
+            n += 1
+            if a.batch < default_batch:
+                reduced += 1
+                total_red += 100.0 * (default_batch - a.batch) / default_batch
+    if n == 0:
+        return 0.0, 0.0
+    return 100.0 * reduced / n, (total_red / reduced if reduced else 0.0)

@@ -1,0 +1,121 @@
+"""The splitting algorithm (paper §5.4, Algorithm 1) + beyond-paper modes.
+
+Phase 1 — candidate selection: boundaries whose per-sample output is no
+larger than the application input, and not after the freeze index.
+Phase 2 — winner selection: the *earliest* candidate whose batch-scaled
+output fits through the network within ``window_s`` seconds
+(C = bandwidth x window). Defaults to the freeze index when no candidate
+qualifies (Alg. 1 line 13).
+
+Beyond-paper extensions (recorded separately in EXPERIMENTS.md §Perf):
+  * ``compress_ratio`` — int8 boundary compression divides the bytes the
+    winner-selection sees (the paper's l_split knob, directly).
+  * ``cost_optimal``  — pick argmin of the §4 cost model over all
+    boundaries instead of the paper's threshold heuristic.
+  * ``collective_aware`` — candidates are restricted to block boundaries
+    (always true by construction here: boundaries ARE block boundaries, so
+    the tier transfer never splits a TP all-reduce pair).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.config import HapiConfig
+from repro.core.profiler import LayerProfile
+
+
+@dataclass(frozen=True)
+class SplitDecision:
+    split_index: int                 # boundary index: prefix = blocks [0, split)
+    bytes_per_sample: float          # uncompressed boundary bytes
+    wire_bytes_per_iter: float       # after compression, x train batch
+    candidates: List[int]
+    reason: str
+
+    @property
+    def pushdown(self) -> bool:
+        return self.split_index > 0
+
+
+def candidate_boundaries(profile: LayerProfile, freeze_index: Optional[int] = None) -> List[int]:
+    """Alg. 1 phase 1: output <= app input, index <= freeze index."""
+    fz = profile.freeze_index if freeze_index is None else freeze_index
+    return [
+        i
+        for i in range(1, fz + 1)
+        if profile.out_bytes[i] <= profile.input_bytes
+    ]
+
+
+def choose_split(
+    profile: LayerProfile,
+    hapi: HapiConfig,
+    train_batch: int,
+    freeze_index: Optional[int] = None,
+) -> SplitDecision:
+    """Faithful Algorithm 1."""
+    fz = profile.freeze_index if freeze_index is None else freeze_index
+    cands = candidate_boundaries(profile, fz)
+    compress = 0.25 if hapi.compress_transfer else 1.0  # bf16 -> int8(+scales)
+    threshold = hapi.network_bandwidth * hapi.window_s
+
+    winner, reason = fz, "default: freeze index (no candidate under C)"
+    for i in cands:
+        wire = profile.out_bytes[i] * train_batch * compress
+        if wire < threshold:
+            winner, reason = i, f"earliest candidate with wire bytes {wire:.3e} < C {threshold:.3e}"
+            break
+
+    if not cands:
+        # Token-input LMs: every boundary activation exceeds the raw token
+        # bytes, so phase 1 is empty and the paper's default (freeze index)
+        # applies — maximal pushdown, minimal+equal wire bytes.
+        reason = "no candidate (input smaller than every boundary); freeze index"
+
+    return SplitDecision(
+        split_index=winner,
+        bytes_per_sample=profile.out_bytes[winner],
+        wire_bytes_per_iter=profile.out_bytes[winner] * train_batch * compress,
+        candidates=cands,
+        reason=reason,
+    )
+
+
+def choose_split_cost_optimal(
+    profile: LayerProfile,
+    hapi: HapiConfig,
+    train_batch: int,
+    *,
+    cos_flops: float,
+    client_flops: float,
+    n_tenants: int = 1,
+    dataset_size: Optional[int] = None,
+    freeze_index: Optional[int] = None,
+) -> SplitDecision:
+    """Beyond-paper: argmin of the roofline-corrected §4 cost model over all
+    boundaries (including 0 = no pushdown)."""
+    from repro.core.cost_model import roofline_epoch_time
+
+    fz = profile.freeze_index if freeze_index is None else freeze_index
+    compress = 0.25 if hapi.compress_transfer else 1.0
+    d = dataset_size or train_batch * 32
+
+    best_i, best_t = 0, float("inf")
+    for i in range(0, fz + 1):
+        t = roofline_epoch_time(
+            profile, i, d, train_batch,
+            bandwidth=hapi.network_bandwidth,
+            cos_flops=cos_flops, client_flops=client_flops,
+            n_tenants=n_tenants, compress=compress,
+        ).total
+        if t < best_t - 1e-12:
+            best_i, best_t = i, t
+
+    return SplitDecision(
+        split_index=best_i,
+        bytes_per_sample=profile.out_bytes[best_i],
+        wire_bytes_per_iter=profile.out_bytes[best_i] * train_batch * compress,
+        candidates=list(range(0, fz + 1)),
+        reason=f"cost-optimal: epoch time {best_t:.3f}s",
+    )

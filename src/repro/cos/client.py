@@ -1,0 +1,263 @@
+"""The Hapi client (paper §5.2/§5.4/§6) + the status-quo baseline client.
+
+The client: profiles the model once, chooses the split index (Alg. 1),
+then per training iteration issues one POST per storage object, awaits
+out-of-order completions, REORDERS them to preserve the learning
+trajectory, re-issues stragglers, and runs the training phase (the
+remaining frozen blocks + trainable suffix) at the training batch size.
+
+The baseline client streams raw objects (GET) and computes everything
+locally, pipelining transfer of batch i+1 with compute of batch i
+(paper Fig. 6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.config import HW, HapiConfig
+from repro.core.profiler import LayerProfile
+from repro.core.splitter import SplitDecision, choose_split
+from repro.cos.clock import Accelerator, EventLog, Link
+from repro.cos.objectstore import ObjectStore
+from repro.cos.server import HapiServer, PostRequest, PostResponse
+
+
+@dataclass
+class IterationStats:
+    iteration: int
+    t_start: float
+    t_end: float
+    wire_bytes: float
+    n_posts: int
+    reissued: int = 0
+
+
+@dataclass
+class EpochResult:
+    execution_time: float
+    transferred_per_iter: float
+    total_wire_bytes: float
+    iterations: List[IterationStats]
+    split: int
+    oom: bool = False
+
+    @property
+    def n_iterations(self) -> int:
+        return len(self.iterations)
+
+
+class HapiClient:
+    def __init__(
+        self,
+        server: HapiServer,
+        link: Link,
+        profile: LayerProfile,
+        hapi: HapiConfig,
+        model_key: str,
+        *,
+        client_flops: float = HW.peak_flops_bf16,
+        client_hbm: float = HW.hbm_capacity,
+        has_accelerator: bool = True,
+        tenant: int = 0,
+        straggler_factor: float = 3.0,
+        train_fn: Optional[Callable] = None,   # live suffix training
+        mxu_efficiency: float = 0.4,
+        push_training: bool = False,           # ALL_IN_COS comparison mode
+    ) -> None:
+        self.server = server
+        self.link = link
+        self.profile = profile
+        self.hapi = hapi
+        self.model_key = model_key
+        self.tenant = tenant
+        self.straggler_factor = straggler_factor
+        self.train_fn = train_fn
+        self.push_training = push_training
+        eff_flops = client_flops if has_accelerator else client_flops / 40.0
+        self.accel = Accelerator(name=f"client{tenant}", flops=eff_flops, hbm=client_hbm)
+        self.has_accelerator = has_accelerator
+        self.mxu_efficiency = mxu_efficiency
+        self.log = EventLog()
+        self._next_req = tenant * 1_000_000
+        # Split once per application (paper: before start).
+        self.decision: SplitDecision = choose_split(profile, hapi, train_batch=1)
+
+    def choose_split_for(self, train_batch: int) -> SplitDecision:
+        self.decision = choose_split(self.profile, self.hapi, train_batch)
+        return self.decision
+
+    # ------------------------------------------------------------------
+    def run_epoch(
+        self,
+        dataset: str,
+        train_batch: int,
+        *,
+        t0: float = 0.0,
+        max_iterations: Optional[int] = None,
+    ) -> EpochResult:
+        """One fine-tuning epoch over a dataset stored as COS objects."""
+        store = self.server.store
+        objects = store.object_names(dataset)
+        if self.push_training:
+            split = self.profile.n_boundaries - 1  # everything in the COS
+        else:
+            split = self.choose_split_for(train_batch).split_index
+        obj_size = store.objects[objects[0]].n_samples if objects else 0
+        posts_per_iter = max(1, train_batch // max(obj_size, 1))
+
+        iters: List[IterationStats] = []
+        t = t0
+        total_wire = 0.0
+        it = 0
+        oi = 0
+        while oi < len(objects):
+            group = objects[oi : oi + posts_per_iter]
+            oi += posts_per_iter
+            stats = self._run_iteration(it, t, group, split, train_batch)
+            if stats is None:
+                # Requests were rejected (cannot fit even alone) — the
+                # paper's OOM 'X': a non-adaptable job at this batch size
+                # simply cannot run in the COS.
+                return EpochResult(float("inf"), 0.0, 0.0, [], split=split,
+                                   oom=True)
+            iters.append(stats)
+            total_wire += stats.wire_bytes
+            t = stats.t_end
+            it += 1
+            if max_iterations and it >= max_iterations:
+                break
+
+        return EpochResult(
+            execution_time=t - t0,
+            transferred_per_iter=total_wire / max(len(iters), 1),
+            total_wire_bytes=total_wire,
+            iterations=iters,
+            split=split,
+        )
+
+    def _run_iteration(self, it: int, t: float, group: List[str], split: int,
+                       train_batch: int) -> Optional[IterationStats]:
+        reqs = []
+        for oname in group:
+            self._next_req += 1
+            b_max = (train_batch if self.push_training
+                     else min(train_batch, self.hapi.cos_batch))
+            reqs.append(PostRequest(
+                req_id=self._next_req, tenant=self.tenant,
+                model_key=self.model_key, split=split, object_name=oname,
+                b_max=b_max,
+                profile=self.profile, arrival=t,
+                compress=self.hapi.compress_transfer,
+                adaptable=not self.push_training,
+            ))
+            self.server.submit(reqs[-1])
+        responses = self.server.drain(now=t)
+        by_id = {r.req_id: r for r in responses}
+        if any(r.req_id not in by_id for r in reqs):
+            return None  # rejected -> OOM
+
+        # Straggler mitigation: anything beyond straggler_factor x median
+        # completion is re-issued; the duplicate (fresh queue) wins.
+        done = [by_id[r.req_id] for r in reqs if r.req_id in by_id]
+        reissued = 0
+        if len(done) >= 3:
+            med = float(np.median([d.finished - d.arrival for d in done]))
+            for i, d in enumerate(done):
+                if d.finished - d.arrival > self.straggler_factor * med:
+                    dup = reqs[i]
+                    dup = PostRequest(
+                        req_id=dup.req_id + 500_000, tenant=dup.tenant,
+                        model_key=dup.model_key, split=dup.split,
+                        object_name=dup.object_name, b_max=dup.b_max,
+                        profile=dup.profile, arrival=d.arrival, compress=dup.compress,
+                    )
+                    self.server.submit(dup)
+                    redo = self.server.drain(now=d.arrival)
+                    if redo and redo[0].finished < d.finished:
+                        done[i] = redo[0]
+                        reissued += 1
+
+        # Reorder to the request order (learning trajectory preserved).
+        done.sort(key=lambda d: d.req_id)
+
+        # Pull activations over the bottleneck link.
+        t_data = t
+        wire = 0.0
+        for d in done:
+            _, t_data = self.link.transfer(max(t_data, d.finished), d.act_bytes)
+            wire += d.act_bytes
+
+        # Training phase at the training batch size (suffix fwd+bwd).
+        prof = self.profile
+        suffix_flops = 3.0 * (prof.total_flops - prof.cum_flops[split]) * train_batch
+        _, t_end = self.accel.compute(t_data, suffix_flops,
+                                      efficiency=self.mxu_efficiency)
+        if self.train_fn is not None and all(d.acts is not None for d in done):
+            self.train_fn([d.acts for d in done])
+        self.log.add(t_end, "iteration", f"{it}")
+        return IterationStats(it, t, t_end, wire, len(group), reissued)
+
+
+class BaselineClient:
+    """Status quo: stream raw objects, run the whole DNN client-side,
+    overlapping next-batch transfer with current-batch compute."""
+
+    def __init__(self, store: ObjectStore, link: Link, profile: LayerProfile,
+                 *, client_flops: float = HW.peak_flops_bf16,
+                 client_hbm: float = HW.hbm_capacity,
+                 has_accelerator: bool = True,
+                 mxu_efficiency: float = 0.4) -> None:
+        self.store = store
+        self.link = link
+        self.profile = profile
+        eff = client_flops if has_accelerator else client_flops / 40.0
+        self.accel = Accelerator(name="client-base", flops=eff, hbm=client_hbm)
+        self.mxu_efficiency = mxu_efficiency
+
+    def run_epoch(self, dataset: str, train_batch: int, *, t0: float = 0.0,
+                  freeze_index: Optional[int] = None,
+                  max_iterations: Optional[int] = None) -> EpochResult:
+        prof = self.profile
+        fz = freeze_index if freeze_index is not None else prof.freeze_index
+        objects = self.store.object_names(dataset)
+        obj_size = self.store.objects[objects[0]].n_samples if objects else 1
+        per_iter = max(1, train_batch // max(obj_size, 1))
+
+        # OOM check (paper Fig. 6/10 'X'): full-model act memory at the
+        # training batch size + weights must fit client HBM.
+        need = prof.memory_estimate(prof.n_boundaries - 1, train_batch) + \
+            prof.model_param_bytes * 2
+        if need > self.accel.hbm:
+            return EpochResult(float("inf"), 0.0, 0.0, [], split=0, oom=True)
+
+        iters: List[IterationStats] = []
+        t_compute = t0
+        t_net = t0
+        total = 0.0
+        it = 0
+        oi = 0
+        while oi < len(objects):
+            group = objects[oi: oi + per_iter]
+            oi += per_iter
+            nbytes = sum(self.store.objects[o].nbytes for o in group)
+            n = sum(self.store.objects[o].n_samples for o in group)
+            # pipelined: transfer batch i+1 during compute of batch i
+            _, t_net = self.link.transfer(t_net, nbytes)
+            flops = (prof.cum_flops[fz] + 3.0 * (prof.total_flops - prof.cum_flops[fz])) * n
+            start = max(t_net, t_compute)
+            _, t_compute = self.accel.compute(start, flops, self.mxu_efficiency)
+            iters.append(IterationStats(it, start, t_compute, nbytes, len(group)))
+            total += nbytes
+            it += 1
+            if max_iterations and it >= max_iterations:
+                break
+        return EpochResult(
+            execution_time=t_compute - t0,
+            transferred_per_iter=total / max(len(iters), 1),
+            total_wire_bytes=total,
+            iterations=iters,
+            split=0,
+        )

@@ -1,0 +1,74 @@
+"""Deterministic virtual clock + resource timeline for the COS simulation.
+
+Benchmarks must be reproducible and fast on CPU, so time is simulated:
+every resource (network link, accelerator slice, storage node) is a
+timeline that admits work intervals; transfers/compute advance the clock
+by modeled durations instead of sleeping. The same server/client code
+also executes the *real* JAX computation (live mode) — the clock only
+decides what the wall would have shown on the paper's testbed or a TPU
+pod.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class Timeline:
+    """A serially-reusable resource (link, accelerator, disk)."""
+    name: str
+    busy_until: float = 0.0
+    busy_time: float = 0.0
+
+    def reserve(self, start: float, duration: float) -> Tuple[float, float]:
+        """Schedule work at >= start; returns (actual_start, end)."""
+        s = max(start, self.busy_until)
+        e = s + duration
+        self.busy_until = e
+        self.busy_time += duration
+        return s, e
+
+
+@dataclass
+class Link(Timeline):
+    bandwidth: float = 125e6   # bytes/s (1 Gbps default, paper §7.1)
+    latency: float = 1e-3
+
+    def transfer(self, start: float, nbytes: float) -> Tuple[float, float]:
+        return self.reserve(start, self.latency + nbytes / self.bandwidth)
+
+
+@dataclass
+class Accelerator(Timeline):
+    """Storage- or client-side accelerator with an HBM budget.
+    ``slowdown`` models a degraded/straggling device (unknown to the
+    scheduler — stragglers are by definition unpredicted)."""
+    flops: float = 197e12
+    hbm: float = 16e9
+    mem_used: float = 0.0
+    slowdown: float = 1.0
+
+    def compute(self, start: float, flops: float, efficiency: float = 0.4):
+        return self.reserve(start, self.slowdown * flops / (self.flops * efficiency))
+
+    def try_alloc(self, nbytes: float) -> bool:
+        if self.mem_used + nbytes > self.hbm:
+            return False
+        self.mem_used += nbytes
+        return True
+
+    def free(self, nbytes: float) -> None:
+        self.mem_used = max(0.0, self.mem_used - nbytes)
+
+
+class EventLog:
+    def __init__(self) -> None:
+        self.events: List[Tuple[float, str, str]] = []
+
+    def add(self, t: float, kind: str, detail: str = "") -> None:
+        self.events.append((t, kind, detail))
+
+    def filter(self, kind: str) -> List[Tuple[float, str, str]]:
+        return [e for e in self.events if e[1] == kind]

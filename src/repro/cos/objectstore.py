@@ -1,0 +1,75 @@
+"""Simulated cloud object store (Swift-like: proxy + replicated storage
+nodes, fixed-size objects).
+
+Datasets are stored as equal-sized chunks (paper: 1000 images per object,
+chosen to avoid small requests [40]). The proxy reads objects from storage
+nodes over a fast internal network; the *external* link to the compute
+tier is the bottleneck the whole system is built around.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cos.clock import Link, Timeline
+
+
+@dataclass
+class StoredObject:
+    name: str
+    payload: dict                  # column -> np.ndarray (leading dim = samples)
+    nbytes: int
+    n_samples: int
+
+
+class ObjectStore:
+    def __init__(
+        self,
+        n_storage_nodes: int = 3,
+        replication: int = 3,
+        internal_bandwidth: float = 5e9,   # NVMe-class per node
+    ) -> None:
+        self.objects: Dict[str, StoredObject] = {}
+        self.nodes = [
+            Link(name=f"storage{i}", bandwidth=internal_bandwidth, latency=2e-4)
+            for i in range(n_storage_nodes)
+        ]
+        self.replication = min(replication, n_storage_nodes)
+        self._placement: Dict[str, List[int]] = {}
+
+    # -- data management ------------------------------------------------------
+    def put_dataset(self, name: str, columns: Dict[str, np.ndarray],
+                    object_size: int = 1000) -> List[str]:
+        """Split a dataset into fixed-size objects. Returns object names."""
+        n = len(next(iter(columns.values())))
+        names = []
+        for i, lo in enumerate(range(0, n, object_size)):
+            hi = min(lo + object_size, n)
+            payload = {k: v[lo:hi] for k, v in columns.items()}
+            nbytes = sum(int(v.nbytes) for v in payload.values())
+            oname = f"{name}/part-{i:05d}"
+            self.objects[oname] = StoredObject(oname, payload, nbytes, hi - lo)
+            self._placement[oname] = [
+                (i + r) % len(self.nodes) for r in range(self.replication)
+            ]
+            names.append(oname)
+        return names
+
+    def object_names(self, dataset: str) -> List[str]:
+        return sorted(k for k in self.objects if k.startswith(dataset + "/"))
+
+    # -- storage request (proxy <- storage node) ------------------------------
+    def read(self, oname: str, t: float, node_choice: int = 0) -> Tuple[StoredObject, float]:
+        """Returns (object, time_ready). Reads from the least-busy replica."""
+        obj = self.objects[oname]
+        replicas = self._placement[oname]
+        node = min(
+            (self.nodes[r] for r in replicas), key=lambda nd: nd.busy_until
+        )
+        _, ready = node.transfer(t, obj.nbytes)
+        return obj, ready
+
+    def total_bytes(self, dataset: str) -> int:
+        return sum(self.objects[o].nbytes for o in self.object_names(dataset))

@@ -1,0 +1,251 @@
+"""The Hapi server (paper §5.2/§5.5/§6) — stateless, queue-driven, with
+batch adaptation per accelerator.
+
+Requests are lightweight fixed-size POSTs. The server:
+  1. waits a small window for request coalescing,
+  2. runs Eq. 4 batch adaptation over the queue per accelerator
+     (admitted requests get a COS batch size; overflow defers),
+  3. reads the object from the storage nodes (replica-balanced),
+  4. executes feature extraction up to the split index — real JAX compute
+     when an executor is registered, always charged on the virtual clock
+     from profiled FLOPs,
+  5. emits the split-layer activations for the client to pull.
+
+Statelessness (the paper's design): nothing survives between requests —
+models are "re-loaded" (charged) per request, so any server can be
+restarted or horizontally scaled by just adding queues. ``kill()`` +
+``restart()`` in tests exercise exactly that.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config import HW
+from repro.core.batch_adapt import AdaptRequest, AdaptResult, adapt_batches
+from repro.core.profiler import LayerProfile
+from repro.cos.clock import Accelerator, EventLog
+from repro.cos.objectstore import ObjectStore
+
+
+@dataclass
+class PostRequest:
+    req_id: int
+    tenant: int
+    model_key: str
+    split: int
+    object_name: str
+    b_max: int
+    profile: LayerProfile
+    arrival: float
+    compress: bool = False
+    adaptable: bool = True      # False: ALL_IN_COS — batch cannot shrink
+
+
+@dataclass
+class PostResponse:
+    req_id: int
+    tenant: int
+    object_name: str
+    acts: Optional[Any]            # live activations (or None in timing mode)
+    act_bytes: float
+    cos_batch: int
+    arrival: float
+    started: float
+    finished: float
+
+    @property
+    def queue_delay(self) -> float:
+        return self.started - self.arrival
+
+
+@dataclass
+class _Lease:
+    end: float
+    nbytes: float
+    accel: int
+
+
+class HapiServer:
+    def __init__(
+        self,
+        store: ObjectStore,
+        n_accelerators: int = 2,
+        hbm_per_accel: float = HW.hbm_capacity,
+        flops_per_accel: float = HW.peak_flops_bf16,
+        wait_window: float = 0.01,
+        b_min: int = 25,               # paper §5.5
+        decoupled: bool = True,        # Table 3: proxy-embedded vs decoupled
+        mxu_efficiency: float = 0.4,
+    ) -> None:
+        self.store = store
+        self.accels = [
+            Accelerator(name=f"cos-accel{i}", flops=flops_per_accel, hbm=hbm_per_accel)
+            for i in range(n_accelerators)
+        ]
+        self.wait_window = wait_window
+        self.b_min = b_min
+        self.decoupled = decoupled
+        self.mxu_efficiency = mxu_efficiency
+        self.queue: List[PostRequest] = []
+        self.leases: List[_Lease] = []
+        self.executors: Dict[str, Callable] = {}
+        self.log = EventLog()
+        self.adapt_results: List[AdaptResult] = []
+        self._rr = 0
+        self.alive = True
+
+    # -- model execution registry (live mode) --------------------------------
+    def register_executor(self, model_key: str, fn: Callable) -> None:
+        """fn(payload: dict of np arrays, split: int, cos_batch: int) -> acts"""
+        self.executors[model_key] = fn
+
+    # -- fault tolerance -------------------------------------------------------
+    def kill(self) -> None:
+        """Crash: the queue is lost (clients re-issue), leases vanish."""
+        self.alive = False
+        self.queue.clear()
+        self.leases.clear()
+        for a in self.accels:
+            a.mem_used = 0.0
+
+    def restart(self) -> None:
+        self.alive = True  # stateless: nothing to recover
+
+    # -- request intake ----------------------------------------------------------
+    def submit(self, req: PostRequest) -> None:
+        if not self.alive:
+            raise ConnectionError("hapi server down")
+        self.queue.append(req)
+
+    # -- serving -------------------------------------------------------------------
+    def _free_expired(self, t: float) -> None:
+        kept = []
+        for lease in self.leases:
+            if lease.end <= t:
+                self.accels[lease.accel].free(lease.nbytes)
+            else:
+                kept.append(lease)
+        self.leases = kept
+
+    def drain(self, now: float = 0.0) -> List[PostResponse]:
+        """Serve everything currently queued; returns responses (virtual-
+        clock timed). Repeated batch-adaptation rounds (paper: removed
+        requests 'become part of the next batch assignment round')."""
+        responses: List[PostResponse] = []
+        guard = 0
+        while self.queue and self.alive:
+            guard += 1
+            assert guard < 10_000, "scheduler livelock"
+            t = max(now, min(r.arrival for r in self.queue)) + self.wait_window
+            self._free_expired(t)
+            arrived = [r for r in self.queue if r.arrival <= t]
+            if not arrived:
+                now = min(r.arrival for r in self.queue)
+                continue
+
+            # Distribute evenly over accelerators (paper §5.5), adapt per accel.
+            per_accel: Dict[int, List[PostRequest]] = {}
+            for r in arrived:
+                idx = self._rr % len(self.accels)
+                self._rr += 1
+                per_accel.setdefault(idx, []).append(r)
+
+            progressed = False
+            for ai, reqs in per_accel.items():
+                accel = self.accels[ai]
+                budget = accel.hbm - accel.mem_used
+                adapt_reqs = [
+                    AdaptRequest(
+                        req_id=r.req_id,
+                        mem_per_sample=self._mem_per_sample(r),
+                        mem_model=r.profile.prefix_param_bytes[r.split],
+                        b_max=r.b_max,
+                        b_min_override=0 if r.adaptable else r.b_max,
+                    )
+                    for r in reqs
+                ]
+                res = adapt_batches(adapt_reqs, budget, b_min=self.b_min)
+                self.adapt_results.append(res)
+                by_id = {r.req_id: r for r in reqs}
+                for a in res.assignments:
+                    req = by_id[a.req_id]
+                    resp = self._execute(req, a.batch, a.mem, ai, t)
+                    responses.append(resp)
+                    self.queue.remove(req)
+                    progressed = True
+                # dropped requests stay queued for the next round
+
+            if not progressed:
+                # Nothing fit: wait for the earliest lease to expire.
+                if self.leases:
+                    now = min(l.end for l in self.leases)
+                else:  # pathological: shrink by dropping the newest request
+                    victim = max(arrived, key=lambda r: r.arrival)
+                    self.queue.remove(victim)
+                    self.log.add(t, "reject", victim.object_name)
+        return responses
+
+    def _mem_per_sample(self, req: PostRequest) -> float:
+        """Forward working set; if training layers are pushed down
+        (ALL_IN_COS), backward keeps every trained layer's activations
+        resident (paper Fig. 4) — this is what kills COS concurrency."""
+        prof = req.profile
+        m = prof.act_peak_bytes[req.split]
+        fz = prof.freeze_index
+        if req.split > fz:
+            m += sum(prof.out_bytes[fz + 1 : req.split + 1])
+        return m * (1 + prof.headroom)
+
+    def _execute(self, req: PostRequest, cos_batch: int, mem: float,
+                 accel_idx: int, t: float) -> PostResponse:
+        accel = self.accels[accel_idx]
+        obj, t_data = self.store.read(req.object_name, t)
+
+        n = obj.n_samples
+        prof = req.profile
+        # Per-request FLOPs: forward-only feature extraction up to the
+        # freeze index; anything pushed down beyond it is *training*
+        # (fwd+bwd, 3x) — this is what makes ALL_IN_COS fail to scale
+        # (paper §5.1/§7.5).
+        fz = min(req.split, prof.freeze_index)
+        flops = prof.cum_flops[fz] * n
+        if req.split > fz:
+            flops += 3.0 * (prof.cum_flops[req.split] - prof.cum_flops[fz]) * n
+        # Stateless model (re)load charged as HBM writes.
+        load_time = prof.prefix_param_bytes[req.split] / HW.hbm_bandwidth
+        eff = self.mxu_efficiency if self.decoupled else self.mxu_efficiency * 0.55
+        # Small COS batches under-fill the MXU (replaces paper assumption 4).
+        eff *= min(1.0, cos_batch / 128.0)
+        start, end = accel.compute(max(t_data, t), flops + 1e3, efficiency=eff)
+        end += load_time
+        accel.try_alloc(mem)
+        self.leases.append(_Lease(end=end, nbytes=mem, accel=accel_idx))
+
+        acts = None
+        act_bytes = prof.out_bytes[req.split] * n
+        if req.model_key in self.executors:
+            acts = self.executors[req.model_key](obj.payload, req.split, cos_batch)
+            act_bytes = float(
+                sum(np.asarray(a).nbytes for a in _leaves(acts))
+            )
+        if req.compress:
+            act_bytes *= 0.53  # int8 + per-128 scales vs bf16
+        self.log.add(end, "served", f"{req.object_name} b={cos_batch}")
+        return PostResponse(
+            req_id=req.req_id, tenant=req.tenant, object_name=req.object_name,
+            acts=acts, act_bytes=act_bytes, cos_batch=cos_batch,
+            arrival=req.arrival, started=start, finished=end,
+        )
+
+    # -- metrics -----------------------------------------------------------------
+    def gpu_memory_peak(self) -> float:
+        return max((l.nbytes for l in self.leases), default=0.0)
+
+
+def _leaves(x):
+    import jax
+
+    return jax.tree.leaves(x)

@@ -1,0 +1,94 @@
+"""Activation sharding constraints, context-scoped.
+
+XLA's sharding propagation does not reliably push the batch sharding
+through scan-of-blocks + gather chains, so (like MaxText) the model code
+pins activations explicitly. The launcher installs the desired specs with
+``activation_sharding(...)``; outside that context every ``constrain_*``
+is a no-op, so tests and single-device runs are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_SPECS = {"batch_axes": None, "model_axis": None, "model_size": 0}
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes, model_axis: Optional[str] = "model",
+                        model_size: int = 0):
+    """batch_axes: axis name (or tuple) for the leading batch dim, or None.
+    model_size enables divisibility-checked constraints on model dims."""
+    prev = dict(_SPECS)
+    _SPECS["batch_axes"] = batch_axes
+    _SPECS["model_axis"] = model_axis
+    _SPECS["model_size"] = model_size
+    try:
+        yield
+    finally:
+        _SPECS.update(prev)
+
+
+def active() -> bool:
+    return _SPECS["batch_axes"] is not None
+
+
+def constrain_act(h):
+    """Pin a (B, S, D) / (B, S, H, ...) activation to batch-sharded."""
+    if not active():
+        return h
+    spec = P(_SPECS["batch_axes"], *([None] * (h.ndim - 1)))
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+def constrain_dims(x, dims, alt=None):
+    """Pin arbitrary dims: entries are 'batch', 'model', or None; 'model'
+    entries are skipped unless the dim divides the model-axis size. ``alt``
+    is a fallback dims tuple (e.g. shard d_ff instead of too-few experts).
+    E.g. MoE expert buffers (B, E, C, D) -> ('batch', 'model', None, None)."""
+    if not active():
+        return x
+
+    def build(dd):
+        spec = []
+        ok = True
+        for i, d in enumerate(dd):
+            if d == "batch":
+                spec.append(_SPECS["batch_axes"])
+            elif d == "model":
+                ms = _SPECS["model_size"]
+                if ms and x.shape[i] % ms == 0:
+                    spec.append(_SPECS["model_axis"])
+                else:
+                    ok = False
+                    spec.append(None)
+            else:
+                spec.append(None)
+        return spec, ok
+
+    spec, ok = build(dims)
+    if not ok and alt is not None:
+        spec2, ok2 = build(alt)
+        if ok2:
+            spec = spec2
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def constrain_logits(logits):
+    """(B, S, V): batch over data, vocab over model (when divisible)."""
+    if not active():
+        return logits
+    m = _SPECS["model_axis"]
+    spec = P(_SPECS["batch_axes"], None, m)
+    try:
+        return jax.lax.with_sharding_constraint(logits, spec)
+    except Exception:
+        return jax.lax.with_sharding_constraint(
+            logits, P(_SPECS["batch_axes"], None, None)
+        )

@@ -1,0 +1,94 @@
+"""Elastic re-meshing: survive device loss / fleet growth mid-run.
+
+At thousand-node scale, pods fail and capacity shifts. The checkpointed
+state is layout-free (pure pytrees), so elasticity is a *resharding*
+problem: pick the best mesh the surviving devices support, rebuild the
+PartitionSpecs for it, and device_put the state across.
+
+``plan_elastic_mesh`` chooses the largest (data, model) grid that (a) the
+device count supports, (b) keeps the model axis no larger than the
+reference (TP degree can only shrink safely — growing it would need
+divisibility re-checks against every weight), and (c) keeps per-device
+parameter bytes under the HBM budget.
+
+``reshard_state`` moves a TrainState (or any pytree) onto a new mesh under
+the sharding rules of ``distributed.sharding`` — combined with the
+checkpoint layer this is the full recovery path:
+
+    state, extra, step = restore_checkpoint(dir, like)      # layout-free
+    mesh_spec = plan_elastic_mesh(len(jax.devices()), ref_spec, param_bytes)
+    state = reshard_state(state, model-spec-fns, mesh_spec)  # new fleet
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import HW, MeshSpec
+from repro.distributed.sharding import opt_state_pspecs, param_pspecs
+
+
+def _divisors_desc(n: int):
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def plan_elastic_mesh(
+    n_devices: int,
+    reference: MeshSpec,
+    param_bytes: float = 0.0,
+    hbm_budget: float = HW.hbm_capacity,
+) -> MeshSpec:
+    """Largest (data, model) mesh for ``n_devices`` surviving devices."""
+    ref_model = reference.axis_size("model") if "model" in reference.axes else 1
+    best: Optional[Tuple[int, int]] = None
+    for model in _divisors_desc(ref_model):
+        if n_devices % model:
+            continue
+        data = n_devices // model
+        if param_bytes and param_bytes / (model * max(data, 1)) > hbm_budget:
+            continue  # FSDP footprint would not fit
+        cand = (data, model)
+        if best is None or cand[0] * cand[1] > best[0] * best[1] or (
+            cand[0] * cand[1] == best[0] * best[1] and cand[1] > best[1]
+        ):
+            best = cand
+    if best is None:
+        # Degenerate fallback: pure DP over whatever is left.
+        best = (n_devices, 1)
+    return MeshSpec(best, ("data", "model"))
+
+
+def reshard_state(state, mesh_spec: MeshSpec, *, fsdp: bool = True,
+                  make_mesh: Callable = None):
+    """Re-place a TrainState pytree on a fresh mesh.
+
+    Works from any source layout (including host-restored numpy arrays);
+    the state's frozen/trainable subtrees get parameter specs, optimizer
+    m/v get ZeRO specs, scalars replicate.
+    """
+    mesh = (make_mesh or (lambda ms: jax.make_mesh(ms.shape, ms.axes)))(mesh_spec)
+
+    def put(tree, spec_fn):
+        specs = spec_fn(tree)
+        return jax.tree.map(
+            lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+            tree, specs,
+            is_leaf=lambda x: not isinstance(x, (dict, tuple, list)),
+        )
+
+    from repro.train.steps import TrainState  # local import: avoid cycle
+    from repro.optim.adamw import OptState
+
+    if isinstance(state, TrainState):
+        frozen = put(state.frozen, lambda t: param_pspecs(t, mesh_spec, fsdp=fsdp))
+        trainable = put(state.trainable, lambda t: param_pspecs(t, mesh_spec, fsdp=fsdp))
+        opt = OptState(
+            m=put(state.opt.m, lambda t: opt_state_pspecs(t, mesh_spec)),
+            v=put(state.opt.v, lambda t: opt_state_pspecs(t, mesh_spec)),
+            step=jax.device_put(state.opt.step, NamedSharding(mesh, P())),
+        )
+        return TrainState(frozen, trainable, opt), mesh
+    return put(state, lambda t: param_pspecs(t, mesh_spec, fsdp=fsdp)), mesh

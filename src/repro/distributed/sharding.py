@@ -1,0 +1,229 @@
+"""Sharding rules: DP / TP / EP (+ ZeRO-2D optimizer states) for every arch.
+
+Rules are path-pattern based and *gracefully degrade*: a dimension is
+sharded over an axis only when divisible, otherwise it stays replicated
+(whisper's 12 heads on a 16-way model axis, grok's 8 experts, batch-1
+long-context decode...). This single policy makes all 40 (arch x shape)
+cells lower on the production meshes without per-arch special cases.
+
+Layout summary (DESIGN.md §5):
+  params    — TP over "model" (heads / d_ff / experts / vocab / ssm-heads)
+  optimizer — params' TP spec + ZeRO over the data axes on d_model-like dims
+  batch     — DP over ("pod","data") (baseline) or ("data",) (tier mode)
+  KV caches — batch over data when divisible, else *sequence* over data
+              (the 500k single-sequence decode shards its cache this way)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MeshSpec, ModelConfig, ShapeConfig
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 1 and n % size == 0
+
+
+class Sharder:
+    def __init__(self, mesh_spec: MeshSpec):
+        self.ms = mesh_spec
+        self.model_size = mesh_spec.axis_size("model") if "model" in mesh_spec.axes else 1
+        self.data_axes = mesh_spec.data_axes
+        self.data_size = 1
+        for a in self.data_axes:
+            self.data_size *= mesh_spec.axis_size(a)
+
+    # -- single-dim TP spec with graceful fallback ---------------------------
+    def tp(self, shape: Tuple[int, ...], dim: int) -> P:
+        dim = dim % len(shape)
+        if _div(shape[dim], self.model_size):
+            spec = [None] * len(shape)
+            spec[dim] = "model"
+            return P(*spec)
+        return P()
+
+    def tp_either(self, shape, dim_a: int, dim_b: int) -> P:
+        """Prefer dim_a (e.g. experts); fall back to dim_b (e.g. d_ff)."""
+        dim_a, dim_b = dim_a % len(shape), dim_b % len(shape)
+        if _div(shape[dim_a], self.model_size):
+            return self.tp(shape, dim_a)
+        return self.tp(shape, dim_b)
+
+    # -- add ZeRO data-axis sharding to an optimizer-state spec --------------
+    def zero(self, shape: Tuple[int, ...], tp_spec: P) -> P:
+        spec = list(tp_spec) + [None] * (len(shape) - len(tp_spec))
+        for d in range(len(shape) - 1, -1, -1):
+            if spec[d] is None and _div(shape[d], self.data_size):
+                spec[d] = self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+                break
+        return P(*spec)
+
+    def dp(self, batch: int) -> Optional[object]:
+        """Axis (or axes) to shard a batch dim over, or None."""
+        if _div(batch, self.data_size):
+            return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+        if len(self.data_axes) > 1:
+            sz = self.ms.axis_size("data")
+            if _div(batch, sz):
+                return "data"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+_RULES = [
+    # (path suffix pattern, which dim to TP-shard; None = replicate)
+    ("embed", -2), ("unembed", -2), ("embed_tied", -2), ("dec_embed", -2),
+    ("dec_pos", None),
+    ("attn/wq", -2), ("attn/wk", -2), ("attn/wv", -2), ("attn/wo", -3),
+    ("attn/bq", -2), ("attn/bk", -2), ("attn/bv", -2),
+    ("self_attn/wq", -2), ("self_attn/wk", -2), ("self_attn/wv", -2), ("self_attn/wo", -3),
+    ("cross_attn/wq", -2), ("cross_attn/wk", -2), ("cross_attn/wv", -2), ("cross_attn/wo", -3),
+    ("mlp/w_gate", -1), ("mlp/w_up", -1), ("mlp/w_down", -2),
+    ("moe/router", None),
+    ("mamba/w_z", -2), ("mamba/w_x", -2), ("mamba/w_B", None), ("mamba/w_C", None),
+    ("mamba/w_dt", -1),
+    ("mamba/conv_x", -2), ("mamba/conv_x_b", -2),
+    ("mamba/conv_B", None), ("mamba/conv_B_b", None),
+    ("mamba/conv_C", None), ("mamba/conv_C_b", None),
+    ("mamba/A_log", -1), ("mamba/D", -1), ("mamba/dt_bias", -1),
+    ("mamba/norm_scale", -2), ("mamba/w_out", -3),
+]
+
+_MOE_RULES = [("moe/w_gate", (-3, -1)), ("moe/w_up", (-3, -1)), ("moe/w_down", (-3, -2))]
+
+
+def param_spec(path: str, shape: Tuple[int, ...], sh: Sharder) -> P:
+    for pat, dims in _MOE_RULES:
+        if path.endswith(pat) or (pat in path):
+            return sh.tp_either(shape, *dims)
+    for pat, dim in _RULES:
+        if path.endswith(pat) or (pat + "/" in path) or (pat in path):
+            if dim is None:
+                return P()
+            return sh.tp(shape, dim)
+    return P()  # norms, biases, scalars
+
+
+def param_pspecs(params, mesh_spec: MeshSpec, fsdp: bool = True):
+    """TP specs; with ``fsdp`` (default) params are additionally sharded
+    over the data axes on a free d_model-like dim (FSDP/ZeRO-3 — XLA SPMD
+    inserts the per-block all-gathers). Pure-TP (fsdp=False) trades HBM for
+    fewer collectives — a hillclimb knob for the small archs."""
+    sh = Sharder(mesh_spec)
+
+    def f(path, x):
+        tp = param_spec(_path_str(path), x.shape, sh)
+        return sh.zero(x.shape, tp) if fsdp else tp
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def opt_state_pspecs(params, mesh_spec: MeshSpec):
+    """ZeRO-2D: TP spec + data-axis sharding on a free dimension."""
+    sh = Sharder(mesh_spec)
+
+    def f(path, x):
+        tp = param_spec(_path_str(path), x.shape, sh)
+        return sh.zero(x.shape, tp)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation / cache specs
+# ---------------------------------------------------------------------------
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh_spec: MeshSpec):
+    sh = Sharder(mesh_spec)
+    dp = sh.dp(shape.global_batch)
+    tok = P(dp) if dp else P()
+    emb = P(dp, None, None) if dp else P()
+    out = {"tokens": tok, "labels": tok}
+    if cfg.family == "vlm":
+        out["patches"] = emb
+    if cfg.family == "encdec":
+        out = {"frames": emb, "tokens": tok, "labels": tok}
+    return out
+
+
+def act_pspec(cfg: ModelConfig, batch: int, mesh_spec: MeshSpec) -> P:
+    sh = Sharder(mesh_spec)
+    dp = sh.dp(batch)
+    return P(dp, None, None) if dp else P()
+
+
+def logits_pspec(cfg: ModelConfig, batch: int, mesh_spec: MeshSpec) -> P:
+    sh = Sharder(mesh_spec)
+    dp = sh.dp(batch)
+    v = "model" if _div(cfg.padded_vocab, sh.model_size) else None
+    return P(dp, None, v)
+
+
+def cache_pspecs(cache, cfg: ModelConfig, batch: int, mesh_spec: MeshSpec):
+    """KV/Mamba cache specs. Leading dim of every leaf is n_blocks (stacked),
+    then batch. Batch shards over data when divisible; otherwise the cache
+    *sequence* dim (KV k/v: dim 2) shards over data — flash-decode style."""
+    sh = Sharder(mesh_spec)
+    dp = sh.dp(batch)
+
+    import jax.numpy as jnp
+
+    def f(path, x):
+        # NamedTuple fields appear as indices in tree paths, so leaves are
+        # identified structurally: ssm states are the only f32 5-dim leaves;
+        # conv windows have a tiny dim 2 (conv_width-1); KV caches have the
+        # long sequence at dim 2.
+        shp = x.shape
+        spec = [None] * len(shp)
+        if dp:
+            spec[1] = dp
+        if len(shp) == 5:
+            if x.dtype == jnp.float32:            # (nb, B, H, N, P) ssm state
+                if _div(shp[2], sh.model_size):
+                    spec[2] = "model"
+            elif shp[2] <= 8:                      # (nb, B, W-1, H, P) conv_x
+                if _div(shp[3], sh.model_size):
+                    spec[3] = "model"
+            else:                                  # (nb, B, S, Hkv, hd) KV
+                seq_axes = []
+                if not dp and _div(shp[2], sh.data_size):
+                    seq_axes.extend(sh.data_axes)
+                if _div(shp[3], sh.model_size):
+                    spec[3] = "model"
+                else:
+                    # GQA: kv-head count below the TP degree (8 heads on a
+                    # 16-way axis) would replicate the cache — 90 GB/chip
+                    # for gemma2 decode_32k. Flash-decode layout instead:
+                    # shard the cache *sequence* over the model axis; the
+                    # hd contraction stays shard-local and the only
+                    # collectives are score-sized softmax all-reduces.
+                    sub = sh.model_size
+                    if _div(shp[2] // max(int(np.prod([sh.ms.axis_size(a) for a in seq_axes])) if seq_axes else 1, 1), sub):
+                        seq_axes.append("model")
+                if seq_axes:
+                    spec[2] = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(f, cache)

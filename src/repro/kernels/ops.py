@@ -1,0 +1,82 @@
+"""Jit'd public wrappers for the Pallas kernels, with backend dispatch.
+
+``use_pallas(True)`` routes to the Pallas TPU kernels (the TARGET
+implementation, validated in interpret mode on CPU); the default routes to
+the pure-XLA references so every higher layer runs unchanged on any
+backend. The dry-run lowers the XLA path; the kernels are the TPU
+deployment path (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_STATE = {"pallas": False, "interpret": True}
+
+
+def use_pallas(enable: bool = True, interpret: bool = True) -> None:
+    _STATE["pallas"] = enable
+    _STATE["interpret"] = interpret
+
+
+def pallas_enabled() -> bool:
+    return _STATE["pallas"]
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None):
+    if _STATE["pallas"]:
+        from repro.kernels import flash_attention as fk
+
+        return fk.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            interpret=_STATE["interpret"],
+        )
+    return ref.flash_attention(q, k, v, causal=causal, window=window, softcap=softcap)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap",))
+def decode_attention(q, k_cache, v_cache, length, *, softcap=None):
+    if _STATE["pallas"]:
+        from repro.kernels import decode_attention as dk
+
+        return dk.decode_attention_pallas(
+            q, k_cache, v_cache, length, softcap=softcap,
+            interpret=_STATE["interpret"],
+        )
+    return ref.decode_attention(q, k_cache, v_cache, length, softcap=softcap)
+
+
+@jax.jit
+def ssd_scan(x, dtA, dt, B_, C_, init_state=None):
+    if _STATE["pallas"]:
+        from repro.kernels import ssd_scan as sk
+
+        return sk.ssd_scan_pallas(
+            x, dtA, dt, B_, C_, init_state, interpret=_STATE["interpret"]
+        )
+    return ref.ssd_reference(x, dtA, dt, B_, C_, init_state)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def quantize_int8(x, tile: int = 128):
+    if _STATE["pallas"]:
+        from repro.kernels import int8_transfer as ik
+
+        return ik.quantize_int8_pallas(x, tile=tile, interpret=_STATE["interpret"])
+    return ref.quantize_int8(x, tile=tile)
+
+
+@jax.jit
+def dequantize_int8(q, scales):
+    if _STATE["pallas"]:
+        from repro.kernels import int8_transfer as ik
+
+        return ik.dequantize_int8_pallas(q, scales, interpret=_STATE["interpret"])
+    return ref.dequantize_int8(q, scales)

@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated
+against (interpret=True on CPU, real lowering on TPU). They are also the
+fallback implementation ops.py dispatches to on non-TPU backends.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (fwd) oracle
+# ---------------------------------------------------------------------------
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, S, H, hd) — KV already repeated to H
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    b, s, h, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window - 1
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# GQA decode attention oracle
+# ---------------------------------------------------------------------------
+def decode_attention(
+    q: jnp.ndarray,        # (B, Hq, hd) — one token
+    k_cache: jnp.ndarray,  # (B, S, Hkv, hd)
+    v_cache: jnp.ndarray,
+    length: jnp.ndarray,   # scalar — valid cache length (positions < length)
+    *,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    b, hq, hd = q.shape
+    hkv = k_cache.shape[2]
+    rep = hq // hkv
+    s = k_cache.shape[1]
+    qg = q.reshape(b, hkv, rep, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.einsum(
+        "bhrd,bshd->bhrs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    valid = jnp.arange(s)[None, None, None, :] < length
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrs,bshd->bhrd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD chunk oracle — sequential recurrence (ground truth)
+# ---------------------------------------------------------------------------
+def ssd_reference(
+    x: jnp.ndarray,          # (B, S, H, P)
+    dtA: jnp.ndarray,        # (B, S, H) log decay
+    dt: jnp.ndarray,         # (B, S, H) input scale
+    B_: jnp.ndarray,         # (B, S, N)
+    C_: jnp.ndarray,         # (B, S, N)
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, N, P)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(state, inp):
+        xt, at, dtt, bt, ct = inp
+        a = jnp.exp(at)[:, :, None, None]                        # (B,H,1,1)
+        upd = jnp.einsum("bn,bhp->bhnp", bt, xt * dtt[..., None])
+        state = state * a + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dtA.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B_.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C_.astype(jnp.float32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+# ---------------------------------------------------------------------------
+# Int8 boundary compression oracle
+# ---------------------------------------------------------------------------
+def quantize_int8(x: jnp.ndarray, tile: int = 128):
+    """Per-tile symmetric int8 quantization over the last dim.
+    Returns (q int8 (..., D), scales f32 (..., D/tile))."""
+    import math
+
+    *lead, d = x.shape
+    tile = math.gcd(d, tile)  # clamp for narrow (smoke) widths
+    xt = x.reshape(*lead, d // tile, tile).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xt), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xt / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(*lead, d), scale[..., 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, dtype=jnp.bfloat16):
+    *lead, d = q.shape
+    tile = d // scales.shape[-1]
+    qt = q.reshape(*lead, d // tile, tile).astype(jnp.float32)
+    x = qt * scales[..., None]
+    return x.reshape(*lead, d).astype(dtype)

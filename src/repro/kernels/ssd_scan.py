@@ -1,0 +1,127 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+Grid = (B, head_blocks, n_chunks), chunks minor-most: the (hb, N, P)
+recurrent state lives in VMEM scratch across the chunk sweep — the HBM
+traffic per chunk is exactly the chunk's inputs + outputs (the XLA twin
+re-materializes cumsums and decay matrices through fusion boundaries).
+Within a chunk everything is the SSD matrix form: decay matrix L from a
+log-space cumulative sum, C B^T Hadamard L for the diagonal term, carried
+state for the off-diagonal term, state update via decay-to-end weights.
+
+Head-blocked so that VMEM holds (Q x Q) decay tiles per head-block plus
+the (hb, N, P) state: hb = 8 heads of P=64 at N=128 -> ~0.6 MiB state,
+(256 x 256) tiles -> 0.25 MiB each. MXU dims: Q and P multiples of 128/64.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dtA_ref, dts_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref, *, n_chunks: int, hb: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, hb, P)
+    dtA = dtA_ref[0].astype(jnp.float32)    # (Q, hb)
+    dts = dts_ref[0].astype(jnp.float32)    # (Q, hb)
+    B_ = b_ref[0].astype(jnp.float32)       # (Q, N)
+    C_ = c_ref[0].astype(jnp.float32)       # (Q, N)
+
+    q = x.shape[0]
+    cum = jnp.cumsum(dtA, axis=0)                            # (Q, hb)
+    cb = jax.lax.dot_general(
+        C_, B_, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                        # (Q, Q)
+    xs = x * dts[:, :, None]                                 # (Q, hb, P)
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tri = ii >= jj
+
+    state = state_ref[...]                                   # (hb, N, P)
+    y_acc = jnp.zeros_like(x)
+    for h in range(hb):  # static unroll over the head block
+        Lh = jnp.where(tri, jnp.exp(cum[:, h][:, None] - cum[:, h][None, :]), 0.0)
+        scores = cb * Lh                                     # (Q, Q)
+        y_diag = jax.lax.dot_general(
+            scores, xs[:, h, :], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # (Q, P)
+        decay_in = jnp.exp(cum[:, h])                        # (Q,)
+        y_off = jax.lax.dot_general(
+            C_ * decay_in[:, None], state[h], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # (Q, P)
+        y_acc = y_acc.at[:, h, :].set(y_diag + y_off)
+
+        decay_end = jnp.exp(cum[-1, h] - cum[:, h])          # (Q,)
+        s_chunk = jax.lax.dot_general(
+            B_ * decay_end[:, None], xs[:, h, :], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # (N, P)
+        state = state.at[h].set(state[h] * jnp.exp(cum[-1, h]) + s_chunk)
+
+    state_ref[...] = state
+    y_ref[0] = y_acc.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block", "interpret"))
+def ssd_scan_pallas(
+    x: jnp.ndarray,      # (B, S, H, P)
+    dtA: jnp.ndarray,    # (B, S, H)
+    dt: jnp.ndarray,     # (B, S, H)
+    B_: jnp.ndarray,     # (B, S, N)
+    C_: jnp.ndarray,     # (B, S, N)
+    init_state=None,     # must be None (kernel owns state init)
+    *,
+    chunk: int = 256,
+    head_block: int = 4,
+    interpret: bool = True,
+):
+    assert init_state is None, "pallas ssd owns the state"
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    hb = min(head_block, h)
+    assert h % hb == 0, (h, hb)
+    n_chunks = s // chunk
+    grid = (b, h // hb, n_chunks)
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks, hb=hb)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hb, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, hb), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, hb), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hb, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, hb, n, p), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hb, n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dtA, dt, B_, C_)
+    return y, state

@@ -1,0 +1,55 @@
+"""Production meshes.
+
+All constructors are FUNCTIONS so importing this module never touches jax
+device state (jax locks the device count on first backend init — the
+dry-run must set XLA_FLAGS before anything here runs).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.config import MULTI_POD, SINGLE_POD, MeshSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_spec(*, multi_pod: bool = False) -> MeshSpec:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_mesh(spec: MeshSpec):
+    return jax.make_mesh(spec.shape, spec.axes)
+
+
+def make_tier_meshes() -> Tuple[object, object]:
+    """Two-mesh tier mode (paper client/server as separate programs):
+    pod 0's chips = the storage (COS) mesh, pod 1's = the compute mesh.
+    Requires >= 512 devices (the multi-pod dry-run environment)."""
+    devs = jax.devices()
+    n = len(devs) // 2
+    storage = jax.sharding.Mesh(
+        __import__("numpy").array(devs[:n]).reshape(16, 16), ("data", "model")
+    )
+    compute = jax.sharding.Mesh(
+        __import__("numpy").array(devs[n:]).reshape(16, 16), ("data", "model")
+    )
+    return storage, compute
+
+
+def make_small_mesh(n_data: int = 2, n_model: int = 2, pod: int = 0):
+    """Reduced mesh for tests (host devices)."""
+    if pod:
+        return jax.make_mesh((pod, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def small_mesh_spec(n_data: int = 2, n_model: int = 2, pod: int = 0) -> MeshSpec:
+    if pod:
+        return MeshSpec((pod, n_data, n_model), ("pod", "data", "model"))
+    return MeshSpec((n_data, n_model), ("data", "model"))

@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation anywhere — the dry-run lowers against these specs
+(the shannon/kernels pattern: weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models.module import dtype_of
+from repro.models.transformer import Model
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch specs for train/prefill kinds."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cdt = dtype_of(cfg.compute_dtype)
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt),
+            "tokens": jax.ShapeDtypeStruct((b, cfg.dec_seq), i32),
+            "labels": jax.ShapeDtypeStruct((b, cfg.dec_seq), i32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s - cfg.n_patches), i32),
+            "patches": jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), cdt),
+            "labels": jax.ShapeDtypeStruct((b, s - cfg.n_patches), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        "labels": jax.ShapeDtypeStruct((b, s), i32),
+    }
+
+
+def decode_specs(model: Model, cfg: ModelConfig, shape: ShapeConfig) -> Tuple:
+    """(cache, token, pos) specs for decode kinds: one new token against a
+    KV cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, token, pos
+
+
+def param_specs(model: Model, key=None):
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(model.init, key)

@@ -1,0 +1,176 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_XLA_EXTRA", "")
+    + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Two-mesh tier dry-run: the paper's client/server as separate programs.
+
+Pod 0's 256 chips = the storage (COS) mesh running ``extract_step``;
+pod 1's 256 chips = the compute mesh running ``tune_step``; the split-
+boundary activations cross the inter-pod link (optionally int8-compressed
+— the beyond-paper l_split reduction).
+
+    PYTHONPATH=src python -m repro.launch.tierdry --arch qwen3-32b [--compress]
+    PYTHONPATH=src python -m repro.launch.tierdry --all --json out.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import HW, HapiConfig, RunConfig, SHAPES, TrainConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.autoshard import activation_sharding
+from repro.distributed.sharding import Sharder, batch_pspecs, opt_state_pspecs, param_pspecs
+from repro.launch import mesh as meshlib
+from repro.launch.dryrun import plan_for_mesh, roofline_terms
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.specs import input_specs, param_specs
+from repro.models.api import build_model
+from repro.models.module import dtype_of
+from repro.optim.adamw import OptState
+from repro.train.steps import build_tier_steps
+
+# Cross-pod wire: one DCN link per data row (16 links), HW.ici rate each.
+N_CROSS_LINKS = 16
+
+
+def lower_tier_cell(arch: str, compress: bool = False, microbatch_div: int = 8):
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    ms = meshlib.mesh_spec(multi_pod=False)   # each tier is one 16x16 pod
+    storage_mesh, compute_mesh = meshlib.make_tier_meshes()
+    model = build_model(cfg)
+    hapi = HapiConfig(compress_transfer=compress)
+    plan = plan_for_mesh(cfg, shape, hapi, ms)
+    micro = max(1, shape.global_batch // microbatch_div)
+    tc = TrainConfig(microbatch=micro,
+                     opt_state_dtype="bfloat16" if "grok" in arch else "float32")
+    rc = RunConfig(model=cfg, shape=shape, hapi=hapi, train=tc)
+    extract_step, tune_step = build_tier_steps(model, rc, plan)
+
+    pspec = param_specs(model)
+    frozen_s, trainable_s = jax.eval_shape(
+        lambda p: model.split_params(p, plan.split), pspec
+    )
+    batch_s = input_specs(cfg, shape)
+    batch_sh = batch_pspecs(cfg, shape, ms)
+    dp = Sharder(ms).dp(shape.global_batch)
+    t0 = time.time()
+
+    # --- storage side -------------------------------------------------------
+    froz_sh = param_pspecs(frozen_s, ms, fsdp=True)
+    jf_ex = jax.jit(
+        extract_step,
+        in_shardings=(
+            jax.tree.map(lambda sp: NamedSharding(storage_mesh, sp), froz_sh,
+                         is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.map(lambda sp: NamedSharding(storage_mesh, sp), batch_sh,
+                         is_leaf=lambda x: isinstance(x, P)),
+        ),
+    )
+    with storage_mesh, activation_sharding(dp, model_size=16):
+        lowered_ex = jf_ex.lower(frozen_s, batch_s)
+    comp_ex = lowered_ex.compile()
+    acts_s = jax.eval_shape(extract_step, frozen_s, batch_s)
+    wire_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(acts_s))
+
+    # --- compute side ---------------------------------------------------------
+    train_sh = param_pspecs(trainable_s, ms, fsdp=True)
+    sdt = jnp.bfloat16 if tc.opt_state_dtype == "bfloat16" else jnp.float32
+    opt_s = OptState(
+        m=jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, sdt), trainable_s),
+        v=jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, sdt), trainable_s),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    opt_sh = OptState(opt_state_pspecs(opt_s.m, ms), opt_state_pspecs(opt_s.v, ms), P())
+    acts_sh = jax.tree.map(
+        lambda x: P(dp, *([None] * (x.ndim - 1))), acts_s,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    to_c = lambda tree_sh: jax.tree.map(
+        lambda sp: NamedSharding(compute_mesh, sp), tree_sh,
+        is_leaf=lambda x: isinstance(x, P))
+    jf_tu = jax.jit(
+        tune_step,
+        in_shardings=(to_c(train_sh), to_c(opt_sh), to_c(acts_sh), to_c(batch_sh)),
+        donate_argnums=(0, 1),
+    )
+    with compute_mesh, activation_sharding(dp, model_size=16):
+        lowered_tu = jf_tu.lower(trainable_s, opt_s, acts_s, batch_s)
+    comp_tu = lowered_tu.compile()
+    t1 = time.time()
+
+    hx = analyze_hlo(comp_ex.as_text())
+    ht = analyze_hlo(comp_tu.as_text())
+    ex_terms = roofline_terms(hx.flops, hx.bytes, hx.coll_bytes)
+    tu_terms = roofline_terms(ht.flops, ht.bytes, ht.coll_bytes)
+    wire_s = wire_bytes / (N_CROSS_LINKS * HW.ici_bandwidth)
+    pipe = {
+        "storage_s": max(ex_terms.values()),
+        "wire_s": wire_s,
+        "compute_s_total": max(tu_terms.values()),
+    }
+    step_time = max(pipe.values())  # steady-state pipelined tiers
+
+    def mem(c):
+        ma = c.memory_analysis()
+        return {k: getattr(ma, k, None) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes")} if ma else {}
+
+    return {
+        "arch": arch, "status": "ok", "mode": "tier",
+        "split": plan.split, "cos_batch": plan.cos_batch,
+        "compress": compress,
+        "compile_s": round(t1 - t0, 1),
+        "wire_bytes_per_step": wire_bytes,
+        "wire_s": wire_s,
+        "storage": {"roofline": ex_terms, "memory": mem(comp_ex)},
+        "compute": {"roofline": tu_terms, "memory": mem(comp_tu)},
+        "pipelined_step_s": step_time,
+        "bottleneck": max(pipe, key=pipe.get),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.all else [args.arch]
+    results = []
+    for arch in archs:
+        for compress in ([False, True] if args.all else [args.compress]):
+            try:
+                r = lower_tier_cell(arch, compress=compress)
+            except Exception as e:
+                r = {"arch": arch, "status": "FAIL", "compress": compress,
+                     "error": f"{type(e).__name__}: {e}",
+                     "trace": traceback.format_exc()[-1500:]}
+            results.append(r)
+            if r["status"] == "ok":
+                print(f"[ok] tier {arch:24s} compress={str(compress):5s} "
+                      f"split={r['split']:2d} wire={r['wire_bytes_per_step']/1e9:6.2f}GB "
+                      f"wire_s={r['wire_s']:.3f} storage_s={r['storage']['roofline']}"
+                      f" bottleneck={r['bottleneck']}")
+            else:
+                print(f"[FAIL] tier {arch} — {r['error']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    return 1 if any(r["status"] == "FAIL" for r in results) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

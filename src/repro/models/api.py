@@ -1,0 +1,12 @@
+"""Model registry: config -> Model builder dispatch."""
+from __future__ import annotations
+
+from repro.config import ModelConfig
+from repro.models.encdec import build_encdec
+from repro.models.transformer import Model, build_lm
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return build_encdec(cfg)
+    return build_lm(cfg)

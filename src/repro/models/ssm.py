@@ -1,0 +1,229 @@
+"""Mamba2 (state-space duality) blocks — chunked scan + O(1)-state decode.
+
+Implements the SSD algorithm of arXiv:2405.21060 in its chunked matrix
+form: within-chunk attention-like term + inter-chunk state recurrence.
+All decay products are computed in log space (A < 0 so products <= 1).
+
+TP layout (DESIGN.md §4/§5): projections are split per component with the
+head dimension exposed — ``w_z/w_x: (D, H, P)``, ``w_dt: (D, H)``,
+``w_out: (H, P, D)`` — so heads shard cleanly over the ``model`` mesh axis
+(SSD is per-head; B/C are head-shared and replicated; the only cross-shard
+reduction is the out-projection's standard TP all-reduce). The gated norm
+is per-head RMS (mamba2's grouped RMSNorm), which keeps normalization
+shard-local.
+
+The within-chunk einsum block is the compute hot-spot targeted by the
+``repro.kernels.ssd_scan`` Pallas kernel; this module is the pure-XLA
+twin used for training, lowering, and as the kernel oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import causal_conv1d
+from repro.models.module import dense_init, dtype_of, zeros_init
+
+
+class MambaCache(NamedTuple):
+    conv_x: jnp.ndarray  # (B, W-1, H, P)
+    conv_B: jnp.ndarray  # (B, W-1, N)
+    conv_C: jnp.ndarray  # (B, W-1, N)
+    ssm: jnp.ndarray     # (B, H, N, P) — recurrent state (f32)
+
+
+def ssm_init(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    d, n, h, p = cfg.d_model, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": dense_init(ks[0], d, (h, p), dt),
+        "w_x": dense_init(ks[1], d, (h, p), dt),
+        "w_B": dense_init(ks[2], d, (n,), dt),
+        "w_C": dense_init(ks[3], d, (n,), dt),
+        "w_dt": dense_init(ks[4], d, (h,), dt),
+        "conv_x": (jax.random.normal(ks[5], (cfg.conv_width, h, p)) * 0.1).astype(dt),
+        "conv_x_b": zeros_init((h, p), dt),
+        "conv_B": (jax.random.normal(ks[6], (cfg.conv_width, n)) * 0.1).astype(dt),
+        "conv_B_b": zeros_init((n,), dt),
+        "conv_C": (jax.random.normal(ks[7], (cfg.conv_width, n)) * 0.1).astype(dt),
+        "conv_C_b": zeros_init((n,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))).astype(jnp.float32),
+        "norm_scale": jnp.ones((h, p), dt),
+        "w_out": dense_init(jax.random.fold_in(key, 9), h * p, (d,), dt).reshape(h, p, d),
+    }
+
+
+def _head_rmsnorm(scale, y, eps: float):
+    """Per-head RMS over P (mamba2 grouped RMSNorm). y: (..., H, P)."""
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _project(params, u, cfg: ModelConfig):
+    """u: (B,S,D) -> z,x: (B,S,H,P); B,C: (B,S,N); dt: (B,S,H) (pre-conv)."""
+    z = jnp.einsum("bsd,dhp->bshp", u, params["w_z"])
+    x = jnp.einsum("bsd,dhp->bshp", u, params["w_x"])
+    B_ = jnp.einsum("bsd,dn->bsn", u, params["w_B"])
+    C_ = jnp.einsum("bsd,dn->bsn", u, params["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", u, params["w_dt"])
+    return z, x, B_, C_, dt
+
+
+def _conv_all(params, x, B_, C_, cfg: ModelConfig):
+    b, s, h, p = x.shape
+    xf = causal_conv1d(params["conv_x"].reshape(cfg.conv_width, h * p),
+                       x.reshape(b, s, h * p))
+    x = jax.nn.silu(xf.reshape(b, s, h, p) + params["conv_x_b"])
+    B_ = jax.nn.silu(causal_conv1d(params["conv_B"], B_) + params["conv_B_b"])
+    C_ = jax.nn.silu(causal_conv1d(params["conv_C"], C_) + params["conv_C_b"])
+    return x, B_, C_
+
+
+def ssd_chunked(x, dtA, dtx_scale, B, C, init_state=None, chunk: int = 256):
+    """Chunked SSD scan.
+
+    x:   (B, S, H, P)    head inputs
+    dtA: (B, S, H)       log-decay per step (= dt * A, A < 0)
+    dtx_scale: (B, S, H) dt multiplier applied to inputs
+    B,C: (B, S, N)       input/output projections (single group)
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+
+    # One chunk in flight at a time (scan over chunks) — the working set is
+    # O(B*Q*Q*H) instead of O(B*S*Q*H); this mirrors the Pallas kernel grid.
+    xc = jnp.moveaxis(x.reshape(b, nc, q, h, p), 1, 0)
+    dtAc = jnp.moveaxis(dtA.reshape(b, nc, q, h).astype(jnp.float32), 1, 0)
+    dtsc = jnp.moveaxis(dtx_scale.reshape(b, nc, q, h).astype(jnp.float32), 1, 0)
+    Bc = jnp.moveaxis(B.reshape(b, nc, q, n), 1, 0)
+    Cc = jnp.moveaxis(C.reshape(b, nc, q, n), 1, 0)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), jnp.float32)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(state, inp):
+        xk, ak, dk, bk, ck = inp                           # (B,Q,...)
+        cum = jnp.cumsum(ak, axis=1)                       # (B,Q,H)
+        # Within-chunk decay L[i,j] = exp(cum_i - cum_j), i >= j.
+        Lmat = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,Q,Q,H)
+        Lmat = jnp.where(tri[None, :, :, None], Lmat, 0.0)
+        cb = jnp.einsum("bqn,bkn->bqk", ck, bk, preferred_element_type=jnp.float32)
+        scores = cb[..., None] * Lmat                      # (B,Q,Q,H)
+        xs = xk.astype(jnp.float32) * dk[..., None]        # dt-scaled inputs
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", scores, xs)
+        # Carried-state contribution.
+        decay_in = jnp.exp(cum)                            # (B,Q,H)
+        y_off = jnp.einsum(
+            "bqn,bhnp,bqh->bqhp", ck.astype(jnp.float32), state, decay_in
+        )
+        # State update.
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)       # (B,Q,H)
+        s_chunk = jnp.einsum(
+            "bqn,bqh,bqhp->bhnp", bk.astype(jnp.float32), decay_to_end, xs
+        )
+        new_state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + s_chunk
+        return new_state, (y_diag + y_off)
+
+    final_state, ys = jax.lax.scan(chunk_step, init_state, (xc, dtAc, dtsc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, final_state
+
+
+def _ssd_core(params, u, cfg: ModelConfig, init_state=None):
+    b, s, _ = u.shape
+    z, x, B_, C_, dt = _project(params, u, cfg)
+    raw_x_tail = None
+    if cfg.conv_width > 1:
+        raw_x_tail = (
+            x[:, s - (cfg.conv_width - 1):],
+            B_[:, s - (cfg.conv_width - 1):],
+            C_[:, s - (cfg.conv_width - 1):],
+        )
+    x, B_, C_ = _conv_all(params, x, B_, C_, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, state = ssd_chunked(x, dt * A, dt, B_, C_, init_state, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = _head_rmsnorm(params["norm_scale"], y.astype(u.dtype) * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bshp,hpd->bsd", y, params["w_out"])
+    return out, state, raw_x_tail
+
+
+def ssm_apply(params, u: jnp.ndarray, cfg: ModelConfig):
+    """Full-sequence Mamba2 mixer. u: (B, S, D) -> (B, S, D)."""
+    out, _, _ = _ssd_core(params, u, cfg)
+    return out
+
+
+def ssm_prefill(params, u, cfg: ModelConfig):
+    """Full-sequence mixer that also returns the decode cache."""
+    out, state, (xt, bt, ct) = _ssd_core(params, u, cfg)
+    cache = MambaCache(
+        conv_x=xt.astype(jnp.bfloat16),
+        conv_B=bt.astype(jnp.bfloat16),
+        conv_C=ct.astype(jnp.bfloat16),
+        ssm=state,
+    )
+    return out, cache
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> MambaCache:
+    n, h, p, w = cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim, cfg.conv_width
+    return MambaCache(
+        conv_x=jnp.zeros((batch, w - 1, h, p), dtype),
+        conv_B=jnp.zeros((batch, w - 1, n), dtype),
+        conv_C=jnp.zeros((batch, w - 1, n), dtype),
+        ssm=jnp.zeros((batch, h, n, p), jnp.float32),
+    )
+
+
+def ssm_decode(params, u, cache: MambaCache, cfg: ModelConfig):
+    """Single-token recurrent step. u: (B, 1, D)."""
+    b = u.shape[0]
+    n, h, p, w = cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim, cfg.conv_width
+    z, x_new, B_new, C_new, dt = _project(params, u, cfg)
+
+    def roll(state, new, wgt, bias):
+        # state: (B, W-1, ...), new: (B, 1, ...) -> conv output (B, ...)
+        win = jnp.concatenate([state.astype(new.dtype), new], axis=1)
+        out = jnp.einsum(
+            "bw...,w...->b...", win.astype(jnp.float32), wgt.astype(jnp.float32)
+        ) + bias.astype(jnp.float32)
+        return jax.nn.silu(out), win[:, 1:]
+
+    x, new_cx = roll(cache.conv_x, x_new, params["conv_x"], params["conv_x_b"])
+    B_, new_cb = roll(cache.conv_B, B_new, params["conv_B"], params["conv_B_b"])
+    C_, new_cc = roll(cache.conv_C, C_new, params["conv_C"], params["conv_C_b"])
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                                     # (B,H)
+
+    dx = x * dt[..., None]                                                  # (B,H,P)
+    new_state = cache.ssm * a[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", B_, dx
+    )
+    y = jnp.einsum("bn,bhnp->bhp", C_, new_state)
+    y = y + params["D"][None, :, None] * x
+    y = y[:, None].astype(u.dtype)                                          # (B,1,H,P)
+    y = _head_rmsnorm(params["norm_scale"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bshp,hpd->bsd", y, params["w_out"])
+    new_cache = MambaCache(
+        conv_x=new_cx.astype(cache.conv_x.dtype),
+        conv_B=new_cb.astype(cache.conv_B.dtype),
+        conv_C=new_cc.astype(cache.conv_C.dtype),
+        ssm=new_state,
+    )
+    return out, new_cache

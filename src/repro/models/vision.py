@@ -1,0 +1,303 @@
+"""The paper's own models (AlexNet, ResNet18, VGG11, encoder Transformer).
+
+These power the paper-faithful measurement study (Figs. 2–4) and the
+end-to-end benchmarks (Figs. 10–15): per-layer output sizes, per-layer
+compute, arbitrary-layer splitting. Layers are explicit (name, init,
+apply) triples so ``apply_range(params, x, lo, hi)`` can start/stop at any
+layer — the paper's "custom DNN models that run the forward pass between
+arbitrary start and end layers" (§6).
+
+Images are NHWC. BatchNorm runs in inference mode (frozen statistics) —
+fine-tuning freezes these layers anyway (paper §2.3).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class VisionModel(NamedTuple):
+    name: str
+    layer_names: List[str]
+    freeze_index: int
+    init: Callable          # (key, input_shape) -> list of per-layer params
+    apply_range: Callable   # (params, x, lo, hi) -> activations after layer hi-1
+    input_shape: Tuple[int, int, int]  # (H, W, C)
+    num_classes: int
+
+
+# ---------------------------------------------------------------------------
+# Layer builders — each returns (init_fn(key, in_shape) -> (params, out_shape),
+#                                 apply_fn(params, x) -> y)
+# ---------------------------------------------------------------------------
+def _conv(out_c, kernel, stride=1, pad="SAME"):
+    def init(key, in_shape):
+        h, w, c = in_shape
+        fan_in = kernel * kernel * c
+        wgt = (jax.random.normal(key, (kernel, kernel, c, out_c)) / np.sqrt(fan_in)).astype(jnp.float32)
+        b = jnp.zeros((out_c,), jnp.float32)
+        if pad == "SAME":
+            oh, ow = -(-h // stride), -(-w // stride)
+        else:
+            oh = (h - kernel) // stride + 1
+            ow = (w - kernel) // stride + 1
+        return {"w": wgt, "b": b}, (oh, ow, out_c)
+
+    def apply(p, x):
+        y = jax.lax.conv_general_dilated(
+            x, p["w"], (stride, stride), pad,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return y + p["b"]
+
+    return init, apply
+
+
+def _relu():
+    return (lambda key, s: ({}, s)), (lambda p, x: jax.nn.relu(x))
+
+
+def _maxpool(k=2, stride=2):
+    def init(key, in_shape):
+        h, w, c = in_shape
+        return {}, (h // stride, w // stride, c)
+
+    def apply(p, x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "VALID"
+        )
+
+    return init, apply
+
+
+def _avgpool_to(size):
+    def init(key, in_shape):
+        h, w, c = in_shape
+        return {}, (size, size, c)
+
+    def apply(p, x):
+        b, h, w, c = x.shape
+        kh, kw = h // size, w // size
+        y = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, kh, kw, 1), (1, kh, kw, 1), "VALID"
+        )
+        return y / (kh * kw)
+
+    return init, apply
+
+
+def _flatten():
+    def init(key, in_shape):
+        return {}, (int(np.prod(in_shape)),)
+
+    return init, (lambda p, x: x.reshape(x.shape[0], -1))
+
+
+def _fc(out_dim):
+    def init(key, in_shape):
+        (d,) = in_shape
+        w = (jax.random.normal(key, (d, out_dim)) / np.sqrt(d)).astype(jnp.float32)
+        return {"w": w, "b": jnp.zeros((out_dim,), jnp.float32)}, (out_dim,)
+
+    return init, (lambda p, x: x @ p["w"] + p["b"])
+
+
+def _bn():
+    def init(key, in_shape):
+        c = in_shape[-1]
+        return {
+            "scale": jnp.ones((c,)), "bias": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,)),
+        }, in_shape
+
+    def apply(p, x):
+        return (x - p["mean"]) * jax.lax.rsqrt(p["var"] + 1e-5) * p["scale"] + p["bias"]
+
+    return init, apply
+
+
+def _resblock(out_c, stride=1):
+    c1i, c1a = _conv(out_c, 3, stride)
+    b1i, b1a = _bn()
+    c2i, c2a = _conv(out_c, 3, 1)
+    b2i, b2a = _bn()
+
+    def init(key, in_shape):
+        ks = jax.random.split(key, 3)
+        p1, s1 = c1i(ks[0], in_shape)
+        pb1, _ = b1i(None, s1)
+        p2, s2 = c2i(ks[1], s1)
+        pb2, _ = b2i(None, s2)
+        p = {"c1": p1, "b1": pb1, "c2": p2, "b2": pb2}
+        if stride != 1 or in_shape[-1] != out_c:
+            di, _ = _conv(out_c, 1, stride)
+            p["down"], _ = di(ks[2], in_shape)
+        return p, s2
+
+    def apply(p, x):
+        y = jax.nn.relu(b1a(p["b1"], c1a(p["c1"], x)))
+        y = b2a(p["b2"], c2a(p["c2"], y))
+        if "down" in p:
+            x = jax.lax.conv_general_dilated(
+                x, p["down"]["w"], (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + p["down"]["b"]
+        return jax.nn.relu(y + x)
+
+    return init, apply
+
+
+def _build(name, spec, input_shape, num_classes, freeze_index) -> VisionModel:
+    names = [n for n, _, _ in spec]
+
+    def init(key, in_shape=input_shape):
+        params = []
+        shape = in_shape
+        keys = jax.random.split(key, len(spec))
+        for k, (_, init_fn, _) in zip(keys, spec):
+            p, shape = init_fn(k, shape)
+            params.append(p)
+        return params
+
+    def apply_range(params, x, lo=0, hi=None):
+        hi = len(spec) if hi is None else hi
+        for i in range(lo, hi):
+            x = spec[i][2](params[i], x)
+        return x
+
+    return VisionModel(name, names, freeze_index, init, apply_range, input_shape, num_classes)
+
+
+def alexnet(num_classes=1000) -> VisionModel:
+    spec = []
+    add = lambda n, t: spec.append((n,) + t)
+    add("conv1", _conv(64, 11, 4)); add("relu1", _relu()); add("pool1", _maxpool(3, 2))
+    add("conv2", _conv(192, 5, 1)); add("relu2", _relu()); add("pool2", _maxpool(3, 2))
+    add("conv3", _conv(384, 3, 1)); add("relu3", _relu())
+    add("conv4", _conv(256, 3, 1)); add("relu4", _relu())
+    add("conv5", _conv(256, 3, 1)); add("relu5", _relu()); add("pool5", _maxpool(3, 2))
+    add("avgpool", _avgpool_to(6)); add("flatten", _flatten())
+    add("fc1", _fc(4096)); add("relu6", _relu())
+    add("fc2", _fc(4096)); add("relu7", _relu())
+    add("fc3", _fc(num_classes))
+    # paper Table 1: 22 layers, freeze 17 (we count 20 executable ops; freeze
+    # lands after fc1's relu — same semantic point).
+    return _build("alexnet", spec, (224, 224, 3), num_classes, freeze_index=17)
+
+
+def resnet18(num_classes=1000) -> VisionModel:
+    spec = []
+    add = lambda n, t: spec.append((n,) + t)
+    add("conv1", _conv(64, 7, 2)); add("bn1", _bn()); add("relu1", _relu())
+    add("pool1", _maxpool(3, 2))
+    add("block1a", _resblock(64)); add("block1b", _resblock(64))
+    add("block2a", _resblock(128, 2)); add("block2b", _resblock(128))
+    add("block3a", _resblock(256, 2)); add("block3b", _resblock(256))
+    add("block4a", _resblock(512, 2)); add("block4b", _resblock(512))
+    add("avgpool", _avgpool_to(1)); add("flatten", _flatten())
+    add("fc", _fc(num_classes))
+    # paper Table 1: 14 layers (block granularity), freeze index 11.
+    return _build("resnet18", spec, (224, 224, 3), num_classes, freeze_index=11)
+
+
+def vgg11(num_classes=1000) -> VisionModel:
+    spec = []
+    add = lambda n, t: spec.append((n,) + t)
+    chans = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+    ci = 0
+    for c in chans:
+        if c == "M":
+            add(f"pool{ci}", _maxpool(2, 2))
+        else:
+            ci += 1
+            add(f"conv{ci}", _conv(c, 3, 1)); add(f"relu{ci}", _relu())
+    add("avgpool", _avgpool_to(7)); add("flatten", _flatten())
+    add("fc1", _fc(4096)); add("relu_fc1", _relu())
+    add("fc2", _fc(4096)); add("relu_fc2", _relu())
+    add("fc3", _fc(num_classes))
+    # paper Table 1: 28 layers, freeze 25.
+    return _build("vgg11", spec, (224, 224, 3), num_classes, freeze_index=25)
+
+
+def tiny_transformer_encoder(num_classes=1000, d=384, n_layers=12, heads=6, patch=16) -> VisionModel:
+    """ViT-style encoder Transformer (the paper's 'Transformer', Table 1:
+    19 layers, freeze 17 — patch embed + 12 blocks + norm + head ≈ 15 ops;
+    block granularity)."""
+    spec = []
+    add = lambda n, t: spec.append((n,) + t)
+
+    def patch_embed():
+        def init(key, in_shape):
+            h, w, c = in_shape
+            n_tok = (h // patch) * (w // patch)
+            wgt = (jax.random.normal(key, (patch * patch * c, d)) * 0.02).astype(jnp.float32)
+            pos = (jax.random.normal(jax.random.fold_in(key, 1), (n_tok, d)) * 0.02).astype(jnp.float32)
+            return {"w": wgt, "pos": pos}, (n_tok, d)
+
+        def apply(p, x):
+            b, h, w, c = x.shape
+            x = x.reshape(b, h // patch, patch, w // patch, patch, c)
+            x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, -1, patch * patch * c)
+            return x @ p["w"] + p["pos"]
+
+        return init, apply
+
+    def encoder_block():
+        def init(key, in_shape):
+            n_tok, dd = in_shape
+            ks = jax.random.split(key, 6)
+            hd = dd // heads
+            return {
+                "ln1s": jnp.ones((dd,)), "ln1b": jnp.zeros((dd,)),
+                "wq": (jax.random.normal(ks[0], (dd, heads, hd)) / np.sqrt(dd)),
+                "wk": (jax.random.normal(ks[1], (dd, heads, hd)) / np.sqrt(dd)),
+                "wv": (jax.random.normal(ks[2], (dd, heads, hd)) / np.sqrt(dd)),
+                "wo": (jax.random.normal(ks[3], (heads, hd, dd)) / np.sqrt(dd)),
+                "ln2s": jnp.ones((dd,)), "ln2b": jnp.zeros((dd,)),
+                "w1": (jax.random.normal(ks[4], (dd, 4 * dd)) / np.sqrt(dd)),
+                "w2": (jax.random.normal(ks[5], (4 * dd, dd)) / np.sqrt(4 * dd)),
+            }, in_shape
+
+        def apply(p, x):
+            def ln(s, b, v):
+                mu = v.mean(-1, keepdims=True)
+                var = v.var(-1, keepdims=True)
+                return (v - mu) * jax.lax.rsqrt(var + 1e-5) * s + b
+
+            h1 = ln(p["ln1s"], p["ln1b"], x)
+            q = jnp.einsum("bsd,dhk->bshk", h1, p["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h1, p["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h1, p["wv"])
+            a = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(q.shape[-1])
+            a = jax.nn.softmax(a, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", a, v)
+            x = x + jnp.einsum("bqhd,hdm->bqm", o, p["wo"])
+            h2 = ln(p["ln2s"], p["ln2b"], x)
+            return x + jax.nn.gelu(h2 @ p["w1"]) @ p["w2"]
+
+        return init, apply
+
+    def head():
+        def init(key, in_shape):
+            n_tok, dd = in_shape
+            w = (jax.random.normal(key, (dd, num_classes)) / np.sqrt(dd))
+            return {"w": w}, (num_classes,)
+
+        return init, (lambda p, x: x.mean(axis=1) @ p["w"])
+
+    add("patch_embed", patch_embed())
+    for i in range(n_layers):
+        add(f"block{i}", encoder_block())
+    add("head", head())
+    return _build("transformer", spec, (224, 224, 3), num_classes, freeze_index=11)
+
+
+PAPER_MODELS = {
+    "alexnet": alexnet,
+    "resnet18": resnet18,
+    "vgg11": vgg11,
+    "transformer": tiny_transformer_encoder,
+}

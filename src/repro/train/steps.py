@@ -1,0 +1,209 @@
+"""Step builders: Hapi-integrated fine-tune step, status-quo baseline,
+prefill and decode. These are the functions the dry-run lowers and the
+drivers jit.
+
+The Hapi train step is the paper's pipeline in one program:
+  1. extract: frozen prefix at *COS batch* granularity (scan over
+     microbatches, stop-gradient, optional int8 boundary compression) —
+     §5.5's decoupled batch;
+  2. tune: remaining blocks + head, grad-accumulated at *training batch*
+     granularity, AdamW on the trainable subtree only.
+
+The baseline step is the paper's status quo: one pass, one batch
+granularity, frozen prefix still excluded from grads.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RunConfig
+from repro.core.tier_split import TierPlan, make_extract_fn, make_tune_loss_fn
+from repro.models.transformer import Model
+from repro.optim.adamw import OptState, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    frozen: Any        # feature-extraction prefix params (never updated)
+    trainable: Any     # suffix params
+    opt: OptState
+
+
+def init_train_state(model: Model, rc: RunConfig, plan: TierPlan, key) -> TrainState:
+    params = model.init(key)
+    frozen, trainable = model.split_params(params, plan.split)
+    return TrainState(frozen, trainable, init_opt_state(trainable, rc.train))
+
+
+def _tree_chunk(tree, n_chunks: int):
+    return jax.tree.map(
+        lambda x: x.reshape(n_chunks, x.shape[0] // n_chunks, *x.shape[1:]), tree
+    )
+
+
+def build_hapi_train_step(
+    model: Model,
+    rc: RunConfig,
+    plan: TierPlan,
+    *,
+    constrain: Optional[Callable] = None,
+) -> Callable:
+    """(state, batch) -> (state, metrics). ``constrain(tree, kind)`` may
+    apply sharding constraints (kind in {'acts','grads'})."""
+    tune = make_tune_loss_fn(model, plan)
+    tc = rc.train
+
+    def train_step(state: TrainState, batch):
+        b = next(iter(batch.values())).shape[0]
+        cos_b = min(plan.cos_batch, b)          # §5.5: the adapted COS batch
+        micro = min(tc.microbatch or b, b)      # grad-accumulation chunk
+
+        def gstep_factory(get_acts):
+            def gstep(carry, bt):
+                g_acc, loss_acc = carry
+                acts, bchunk = get_acts(bt)
+                loss, g = jax.value_and_grad(tune)(state.trainable, acts, bchunk)
+                g_acc = jax.tree.map(lambda x, y: x + y.astype(x.dtype), g_acc, g)
+                if constrain:
+                    # Keep the accumulator ZeRO-sharded inside the scan carry.
+                    g_acc = constrain(g_acc, "grads")
+                return (g_acc, loss_acc + loss), None
+            return gstep
+
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), state.trainable)
+        if constrain:
+            zeros = constrain(zeros, "grads")
+
+        if cos_b <= micro:
+            # Fused path: extract chunk -> grad on chunk -> accumulate. One
+            # chunk's boundary activations live at a time.
+            n_chunks = max(1, b // cos_b)
+            batch_c = _tree_chunk(batch, n_chunks)
+            one = TierPlan(plan.split, cos_b, plan.compress, plan.decision)
+            extract_one = make_extract_fn(model, one)
+
+            def get_acts(bt):
+                acts = extract_one(state.frozen, bt)
+                if constrain:
+                    acts = constrain(acts, "acts")
+                return acts, bt
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                gstep_factory(get_acts), (zeros, 0.0), batch_c)
+        else:
+            # Coarse-extraction path (batch adaptation granted a big COS
+            # batch): run feature extraction at cos_b — the frozen-prefix
+            # weights are (FSDP-)gathered cos_b/micro times *fewer* — then
+            # grad-accumulate over micro chunks of the stored activations.
+            extract = make_extract_fn(model, TierPlan(
+                plan.split, cos_b, plan.compress, plan.decision))
+            acts = extract(state.frozen, batch)
+            if constrain:
+                acts = constrain(acts, "acts")
+            n_chunks = max(1, b // micro)
+            acts_c = _tree_chunk(acts, n_chunks)
+            batch_c = _tree_chunk(batch, n_chunks)
+
+            def get_acts(bt):
+                a, bchunk = bt
+                if constrain:
+                    a = constrain(a, "acts")
+                return a, bchunk
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                gstep_factory(get_acts), (zeros, 0.0), (acts_c, batch_c))
+
+        grads = jax.tree.map(lambda g: g / n_chunks, grads)
+        new_trainable, new_opt, om = adamw_update(state.trainable, grads, state.opt, tc)
+        metrics = {"loss": loss_sum / n_chunks, **om}
+        return TrainState(state.frozen, new_trainable, new_opt), metrics
+
+    return train_step
+
+
+def build_baseline_train_step(model: Model, rc: RunConfig, split: int) -> Callable:
+    """Status quo (paper Fig. 5a): full model, training-batch granularity,
+    grads on the trainable suffix only."""
+    tc = rc.train
+
+    def loss_fn(trainable, frozen, batch):
+        params = model.merge_params(frozen, trainable, split)
+        return model.loss(params, batch)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state.trainable, state.frozen, batch)
+        new_trainable, new_opt, om = adamw_update(state.trainable, grads, state.opt, tc)
+        return TrainState(state.frozen, new_trainable, new_opt), {"loss": loss, **om}
+
+    return train_step
+
+
+def build_tier_steps(model: Model, rc: RunConfig, plan: TierPlan,
+                     *, constrain: Optional[Callable] = None):
+    """The two-program tier split (paper Fig. 8): ``extract_step`` runs on
+    the storage mesh (COS), ``tune_step`` on the compute mesh; the returned
+    activations cross the inter-pod link (optionally int8, DESIGN.md §2).
+    """
+    tc = rc.train
+    extract = make_extract_fn(model, plan)
+    tune = make_tune_loss_fn(model, plan)
+
+    def extract_step(frozen, batch):
+        return extract(frozen, batch)
+
+    def tune_step(trainable, opt, acts, batch):
+        b = next(iter(batch.values())).shape[0]
+        micro = min(tc.microbatch or b, b)
+        n_chunks = max(1, b // micro)
+        acts_c = _tree_chunk(acts, n_chunks)
+        batch_c = _tree_chunk(batch, n_chunks)
+
+        def gstep(carry, chunk):
+            g_acc, loss_acc = carry
+            a, bt = chunk
+            loss, g = jax.value_and_grad(tune)(trainable, a, bt)
+            g_acc = jax.tree.map(lambda x, y: x + y.astype(x.dtype), g_acc, g)
+            if constrain:
+                g_acc = constrain(g_acc, "grads")
+            return (g_acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), trainable)
+        if constrain:
+            zeros = constrain(zeros, "grads")
+        (grads, loss_sum), _ = jax.lax.scan(gstep, (zeros, 0.0), (acts_c, batch_c))
+        grads = jax.tree.map(lambda g: g / n_chunks, grads)
+        new_trainable, new_opt, om = adamw_update(trainable, grads, opt, tc)
+        return new_trainable, new_opt, {"loss": loss_sum / n_chunks, **om}
+
+    return extract_step, tune_step
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def build_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        return logits, cache
+
+    return prefill_step
+
+
+def build_decode_step(model: Model) -> Callable:
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = model.decode_step(params, cache, token, pos)
+        return logits, new_cache
+
+    return serve_step
+
+
+def build_forward_step(model: Model) -> Callable:
+    """Pure forward to logits (prefill-shaped lowering for encoder-style
+    cells where the KV cache is not meaningful)."""
+
+    def fwd(params, batch):
+        return model.forward(params, batch)
+
+    return fwd

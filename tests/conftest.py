@@ -1,0 +1,46 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.api import build_model
+
+jax.config.update("jax_enable_x64", False)
+
+
+def make_batch(cfg, batch=2, seq=32, key=None):
+    key = key or jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.random.normal(ks[0], (batch, seq, cfg.d_model), jnp.float32),
+            "tokens": jax.random.randint(ks[1], (batch, cfg.dec_seq), 0, cfg.vocab_size),
+            "labels": jax.random.randint(ks[2], (batch, cfg.dec_seq), 0, cfg.vocab_size),
+        }
+    if cfg.family == "vlm":
+        st = seq - cfg.n_patches
+        return {
+            "tokens": jax.random.randint(ks[0], (batch, st), 0, cfg.vocab_size),
+            "patches": jax.random.normal(ks[1], (batch, cfg.n_patches, cfg.d_model), jnp.float32),
+            "labels": jax.random.randint(ks[2], (batch, st), 0, cfg.vocab_size),
+        }
+    toks = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}
+
+
+_MODEL_CACHE = {}
+
+
+def smoke_model(arch: str):
+    """Cached (cfg, model, params) per arch — model init dominates test time."""
+    if arch not in _MODEL_CACHE:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL_CACHE[arch] = (cfg, model, params)
+    return _MODEL_CACHE[arch]
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(42)

@@ -1,0 +1,86 @@
+"""Property tests for the Eq. 4 batch-adaptation solver (paper §5.5)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.batch_adapt import AdaptRequest, adapt_batches, adaptation_stats
+
+req_strategy = st.builds(
+    AdaptRequest,
+    req_id=st.integers(0, 10_000),
+    mem_per_sample=st.floats(1e3, 1e9, allow_nan=False, allow_infinity=False),
+    mem_model=st.floats(0, 8e9, allow_nan=False, allow_infinity=False),
+    b_max=st.integers(1, 8192),
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    reqs=st.lists(req_strategy, min_size=0, max_size=12),
+    budget=st.floats(1e6, 64e9),
+    b_min=st.integers(1, 256),
+)
+def test_invariants(reqs, budget, b_min):
+    # unique ids
+    reqs = [AdaptRequest(i, r.mem_per_sample, r.mem_model, r.b_max)
+            for i, r in enumerate(reqs)]
+    res = adapt_batches(reqs, budget, b_min=b_min)
+
+    # 1. never exceeds the budget (OOM-safe)
+    assert res.mem_used <= budget + 1e-6
+
+    # 2. bounds respected for every admitted request
+    by_id = {r.req_id: r for r in reqs}
+    for a in res.assignments:
+        r = by_id[a.req_id]
+        assert min(b_min, r.b_max) <= a.batch <= r.b_max
+
+    # 3. admitted + dropped == submitted
+    assert len(res.assignments) + len(res.dropped) == len(reqs)
+
+    # 4. maximality: leftover budget cannot grow any admitted request
+    leftover = budget - res.mem_used
+    for a in res.assignments:
+        r = by_id[a.req_id]
+        if a.batch < r.b_max:
+            assert leftover < r.mem_per_sample * min(8, r.b_max - a.batch) + 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    n=st.integers(1, 10),
+    mem_ps=st.floats(1e6, 1e8),
+    budget=st.floats(1e9, 32e9),
+)
+def test_identical_requests_near_even(n, mem_ps, budget):
+    """Identical requests must receive near-identical batches (fairness of
+    the water-fill; the paper distributes requests evenly)."""
+    reqs = [AdaptRequest(i, mem_ps, 1e8, 1000) for i in range(n)]
+    res = adapt_batches(reqs, budget, b_min=25)
+    if res.assignments:
+        bs = [a.batch for a in res.assignments]
+        assert max(bs) - min(bs) <= 8  # one water-fill step
+
+
+def test_drop_order_is_lifo():
+    """The paper removes one request at a time and retries — later arrivals
+    defer first."""
+    reqs = [AdaptRequest(i, 1e9, 4e9, 100) for i in range(5)]
+    res = adapt_batches(reqs, budget=10e9, b_min=1)
+    assert res.dropped == [4, 3][: len(res.dropped)] or res.dropped[0] == 4
+
+
+def test_all_fit_reaches_bmax():
+    reqs = [AdaptRequest(i, 1e6, 1e8, 64) for i in range(4)]
+    res = adapt_batches(reqs, budget=64e9, b_min=8)
+    assert all(a.batch == 64 for a in res.assignments)
+    assert not res.dropped
+
+
+def test_adaptation_stats_table5():
+    reqs = [AdaptRequest(i, 1e7, 1e8, 1000) for i in range(8)]
+    res = adapt_batches(reqs, budget=16e9, b_min=25)
+    pct, avg_red = adaptation_stats([res], default_batch=1000)
+    assert 0 <= pct <= 100
+    assert 0 <= avg_red <= 100
+    # This budget cannot fit 8 x 1000 x 10MB -> some reductions must happen.
+    assert pct > 0

@@ -1,0 +1,66 @@
+"""Checkpointing: roundtrip, atomicity, GC, corrupt-manifest recovery."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import latest_step, restore_checkpoint, save_checkpoint
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 8)),
+                   "b": jnp.zeros((8,), jnp.bfloat16)},
+        "opt": {"m": jnp.ones((8, 8)), "step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    s = _state()
+    save_checkpoint(d, 10, s, extra={"pipeline": {"next_object": 3}})
+    restored, extra, step = restore_checkpoint(d, s)
+    assert step == 10
+    assert extra["pipeline"]["next_object"] == 3
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_latest_complete_wins(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _state(1))
+    save_checkpoint(d, 2, _state(2))
+    assert latest_step(d) == 2
+    # Corrupt the newest manifest -> restore falls back to step 1.
+    mf = os.path.join(d, "step_00000002", "manifest.json")
+    with open(mf, "w") as f:
+        f.write("{broken")
+    restored, _, step = restore_checkpoint(d, _state())
+    assert step == 1
+
+
+def test_tmp_dirs_never_visible(tmp_path):
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "step_00000005.tmp"))  # crash artifact
+    save_checkpoint(d, 6, _state())
+    assert latest_step(d) == 6
+    assert not any(p.endswith(".tmp") for p in os.listdir(d))
+
+
+def test_gc_keeps_k(tmp_path):
+    d = str(tmp_path)
+    for i in range(6):
+        save_checkpoint(d, i, _state(i), keep=3)
+    steps = sorted(p for p in os.listdir(d) if p.startswith("step_"))
+    assert len(steps) == 3
+    assert latest_step(d) == 5
+
+
+def test_restore_empty_dir(tmp_path):
+    restored, extra, step = restore_checkpoint(str(tmp_path), _state())
+    assert restored is None and step is None

@@ -1,0 +1,62 @@
+"""Cost model (Eqs. 1-3) sanity and fit."""
+import numpy as np
+
+from repro.core.cost_model import (
+    EpochTime,
+    PaperConstants,
+    fit_constants,
+    paper_epoch_time,
+    roofline_epoch_time,
+    transferred_per_iteration,
+)
+from tests_profiles import tiny_profile
+
+
+def test_paper_eq_monotonicity():
+    prof = tiny_profile()
+    consts = PaperConstants(1e-9, 1e-3, 1e-9, 1e-3)
+    t1 = paper_epoch_time(prof, 2, 1000, 100, 100, 1e8, consts)
+    t2 = paper_epoch_time(prof, 2, 2000, 100, 100, 1e8, consts)
+    assert t2.total > t1.total                      # more data, more time
+    t3 = paper_epoch_time(prof, 2, 1000, 100, 100, 2e8, consts)
+    assert t3.network < t1.network                  # more bandwidth, less net
+    tt = paper_epoch_time(prof, 2, 1000, 100, 100, 1e8, consts, n_tenants=4)
+    assert tt.cos > t1.cos                          # |R(t)| multiplies COS
+
+
+def test_no_pushdown_has_no_cos_time():
+    prof = tiny_profile()
+    consts = PaperConstants(1e-9, 1e-3, 1e-9, 1e-3)
+    t = paper_epoch_time(prof, 0, 1000, 100, 100, 1e8, consts)
+    assert t.cos == 0.0
+
+
+def test_fit_constants_recovers_linear_model():
+    rng = np.random.default_rng(0)
+    c_a, c_b = 2e-9, 5e-3
+    meas = []
+    for _ in range(20):
+        b = rng.integers(10, 1000)
+        by = rng.uniform(1e5, 1e7)
+        l = rng.integers(1, 30)
+        t = c_a * b * by + c_b * l
+        meas.append((b, by, l, t))
+    ca, cb = fit_constants(meas)
+    assert abs(ca - c_a) / c_a < 1e-6
+    assert abs(cb - c_b) / c_b < 1e-6
+
+
+def test_roofline_epoch_overlap():
+    prof = tiny_profile()
+    t = roofline_epoch_time(prof, 2, 1000, 100, bandwidth=1e8,
+                            cos_flops=1e14, client_flops=1e14)
+    ts = roofline_epoch_time(prof, 2, 1000, 100, bandwidth=1e8,
+                             cos_flops=1e14, client_flops=1e14, overlap=False)
+    assert t.total <= ts.total
+
+
+def test_transferred_per_iteration_compression():
+    prof = tiny_profile()
+    full = transferred_per_iteration(prof, 2, 100)
+    comp = transferred_per_iteration(prof, 2, 100, compress=0.53)
+    assert comp < full

@@ -1,0 +1,145 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.int8_transfer import dequantize_int8_pallas, quantize_int8_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(b, s, h, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    mk = lambda k: jax.random.normal(k, (b, s, h, hd), jnp.float32).astype(dtype)
+    return mk(ks[0]), mk(ks[1]), mk(ks[2])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,hd,causal,window,cap",
+    [
+        (2, 256, 4, 64, True, None, None),
+        (1, 512, 2, 128, True, None, None),
+        (2, 384, 2, 64, True, 128, None),   # sliding window + seq padding
+        (1, 256, 2, 64, False, None, None), # bidirectional (whisper encoder)
+        (2, 256, 4, 64, True, None, 50.0),  # gemma softcap
+        (1, 128, 1, 32, True, None, None),  # minimal
+    ],
+)
+def test_flash_attention(b, s, h, hd, causal, window, cap, dtype):
+    q, k, v = _qkv(b, s, h, hd, dtype)
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=cap,
+        q_block=128, kv_block=128, interpret=True,
+    )
+    exp = ref.flash_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        causal=causal, window=window, softcap=cap,
+    )
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,hd,length",
+    [
+        (2, 1024, 8, 2, 64, 700),
+        (1, 512, 4, 4, 128, 512),
+        (2, 768, 16, 8, 64, 100),   # GQA 2:1, short fill
+        (1, 300, 8, 8, 64, 300),    # padding path (300 % 256 != 0)
+    ],
+)
+def test_decode_attention(b, s, hq, hkv, hd, length, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, hd), jnp.float32).astype(dtype)
+    kc = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32).astype(dtype)
+    vc = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32).astype(dtype)
+    out = decode_attention_pallas(q, kc, vc, length, s_block=256, interpret=True)
+    exp = ref.decode_attention(
+        q.astype(jnp.float32), kc.astype(jnp.float32), vc.astype(jnp.float32),
+        jnp.int32(length),
+    )
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize(
+    "b,s,h,p,n,chunk,hb",
+    [
+        (2, 512, 8, 64, 128, 128, 4),
+        (1, 256, 4, 32, 64, 64, 4),
+        (1, 256, 4, 32, 16, 128, 2),   # jamba-like small state
+        (2, 128, 8, 64, 128, 128, 8),  # single chunk
+    ],
+)
+def test_ssd_scan(b, s, h, p, n, chunk, hb):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    C_ = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    y, st = ssd_scan_pallas(x, dt * A, dt, B_, C_, chunk=chunk, head_block=hb,
+                            interpret=True)
+    ye, ste = ref.ssd_reference(x, dt * A, dt, B_, C_)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(ste), atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_kernel_matches_chunked_model_path():
+    """The model's XLA SSD (ssm.ssd_chunked) and the Pallas kernel agree."""
+    from repro.models.ssm import ssd_chunked
+
+    ks = jax.random.split(KEY, 5)
+    b, s, h, p, n = 1, 256, 4, 32, 64
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    C_ = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    y1, s1 = ssd_scan_pallas(x, dt * A, dt, B_, C_, chunk=64, head_block=2, interpret=True)
+    y2, s2 = ssd_chunked(x, dt * A, dt, B_, C_, None, chunk=64)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("shape", [(4, 100, 256), (3, 384), (2, 7, 512), (1, 128)])
+def test_int8_roundtrip(shape):
+    x = jax.random.normal(KEY, shape, jnp.float32) * 3
+    q, s = quantize_int8_pallas(x, interpret=True)
+    qe, se = ref.quantize_int8(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qe))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(se), rtol=1e-6)
+    xr = dequantize_int8_pallas(q, s, interpret=True)
+    rel = float(jnp.max(jnp.abs(xr.astype(jnp.float32) - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.02
+
+
+def test_int8_wire_savings():
+    x = jax.random.normal(KEY, (8, 64, 256), jnp.bfloat16)
+    q, s = ref.quantize_int8(x)
+    wire = q.size * q.dtype.itemsize + s.size * s.dtype.itemsize
+    assert wire < 0.6 * x.size * x.dtype.itemsize
+
+
+def test_ops_dispatch_pallas_toggle():
+    from repro.kernels import ops
+
+    x = jax.random.normal(KEY, (2, 64, 4, 32))
+    try:
+        ops.use_pallas(True, interpret=True)
+        o1 = ops.flash_attention(x, x, x, causal=True)
+    finally:
+        ops.use_pallas(False)
+    o2 = ops.flash_attention(x, x, x, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=2e-5)

@@ -1,0 +1,53 @@
+"""Profiler: exact vision sizes, LM analytic flops, over-estimation."""
+import numpy as np
+
+from repro.config import HapiConfig
+from repro.configs import get_config
+from repro.core.profiler import profile_layered, profile_lm
+from repro.models.vision import alexnet, resnet18, vgg11
+
+
+def test_vision_profile_exact_sizes():
+    vm = alexnet(1000)
+    prof = profile_layered(vm)
+    # conv1: 224/4 -> 56x56x64 fp32 = 802816 bytes (paper Fig. 2 shape)
+    assert abs(prof.out_bytes[1] - 56 * 56 * 64 * 4) < 1
+    # sizes decrease non-monotonically; some layer beats the input (Fig. 2)
+    assert min(prof.out_bytes[1:]) < prof.input_bytes
+    assert any(prof.out_bytes[i + 1] > prof.out_bytes[i]
+               for i in range(1, prof.n_boundaries - 1))
+
+
+def test_vision_flops_ordering():
+    """Paper Fig. 3: early conv layers dominate compute."""
+    prof = profile_layered(vgg11(1000))
+    early = prof.cum_flops[len(prof.out_bytes) // 2]
+    late = prof.cum_flops[-1] - early
+    assert early > late
+
+
+def test_lm_profile_flops_scale_with_depth():
+    cfg = get_config("mistral-nemo-12b")
+    prof = profile_lm(cfg, 4096)
+    diffs = np.diff(prof.cum_flops[1:-1])
+    assert np.allclose(diffs, diffs[0])           # homogeneous blocks
+    # 6*N*D fwd check: total fwd flops ~ 2*N*tokens (+attention)
+    n = cfg.param_count()
+    approx = 2 * n * 4096
+    assert 0.5 < prof.total_flops / approx < 2.5
+
+
+def test_memory_estimate_overestimates():
+    """Paper §5.3: 'when the estimation is not perfect, we always
+    over-estimate' — headroom must be positive."""
+    prof = profile_layered(resnet18(10), headroom=0.08)
+    base = prof.prefix_param_bytes[5] + 16 * prof.act_peak_bytes[5]
+    assert prof.memory_estimate(5, 16) > base
+
+
+def test_encdec_profile_has_decoder_tail():
+    cfg = get_config("whisper-small")
+    p = profile_lm(cfg, 1024)
+    per_block = p.cum_flops[2] - p.cum_flops[1]
+    tail = p.cum_flops[-1] - p.cum_flops[-2]
+    assert tail > per_block  # last boundary carries decoder + head work

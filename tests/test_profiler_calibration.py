@@ -1,0 +1,77 @@
+"""Paper §5.3 hybrid calibration + multihost data loading + dry-run
+integration (subprocess: one real lower+compile on 256 fake devices)."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.profiler import calibrate_profile, extrapolation_error, profile_layered
+from repro.models.vision import alexnet
+
+
+def test_calibration_only_increases():
+    prof = profile_layered(alexnet(100))
+    b = 5
+    est = prof.memory_estimate(b, 128)
+    # Measured peak 20% above the estimate -> calibration folds it in.
+    cal = calibrate_profile(prof, b, est * 1.2, 128)
+    assert cal.memory_estimate(b, 128) >= est * 1.19
+    # Measured below the estimate -> keep over-estimating (unchanged).
+    cal2 = calibrate_profile(prof, b, est * 0.5, 128)
+    assert cal2.memory_estimate(b, 128) == est
+
+
+def test_extrapolation_error_paper_range():
+    """Paper reports 0.0005%-11.7% extrapolation error at batch '128MB'.
+    Against a synthetic ground truth that IS batch-linear, our error is
+    ~the headroom; against a +10% perturbed truth it stays bounded."""
+    prof = profile_layered(alexnet(100))
+    b = 5
+    truth = prof.prefix_param_bytes[b] + 128 * prof.act_peak_bytes[b]
+    assert extrapolation_error(prof, b, truth, 128) < 1.0
+    assert extrapolation_error(prof, b, truth * 1.1, 128) < 12.0
+
+
+def test_multihost_pipeline_stripes_are_disjoint():
+    from repro.config import ShapeConfig
+    from repro.configs import get_smoke_config
+    from repro.cos.objectstore import ObjectStore
+    from repro.data.pipeline import COSDataPipeline, synthetic_dataset
+
+    cfg = get_smoke_config("qwen3-32b")
+    data = synthetic_dataset(cfg, ShapeConfig("t", "train", 16, 8), 64, seed=3)
+    store = ObjectStore()
+    store.put_dataset("ds", data, object_size=8)
+
+    seen = []
+    for host in range(2):
+        pipe = COSDataPipeline(store, "ds", global_batch=16, host_id=host,
+                               n_hosts=2)
+        for batch in pipe:
+            assert batch["tokens"].shape == (8, 16)  # 1/n_hosts slice
+            seen.append(np.asarray(batch["tokens"]))
+    allrows = np.concatenate(seen)
+    # Together the hosts cover the dataset exactly once.
+    assert allrows.shape[0] == 64
+    full = np.sort(data["tokens"], axis=None)
+    np.testing.assert_array_equal(np.sort(allrows, axis=None), full)
+
+
+DRYRUN_CMD = [
+    sys.executable, "-m", "repro.launch.dryrun",
+    "--arch", "whisper-small", "--shape", "decode_32k",
+]
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_subprocess():
+    """End-to-end proof that a production-mesh cell lowers + compiles and
+    the roofline instrument reports (smallest cell, ~30 s)."""
+    import os
+
+    env = dict(os.environ, PYTHONPATH="src", REPRO_DRYRUN_DEVICES="256")
+    r = subprocess.run(DRYRUN_CMD, cwd="/root/repo", env=env,
+                       capture_output=True, text=True, timeout=420)
+    assert "[ok] whisper-small" in r.stdout, r.stdout + r.stderr
+    assert "dom=" in r.stdout

@@ -1,0 +1,125 @@
+"""Properties of Algorithm 1 (paper §5.4) and the cost-optimal extension."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.config import HapiConfig
+from repro.configs import get_config
+from repro.core.profiler import LayerProfile, profile_lm, profile_layered
+from repro.core.splitter import (
+    candidate_boundaries,
+    choose_split,
+    choose_split_cost_optimal,
+)
+
+
+def synth_profile(out_bytes, input_bytes, freeze):
+    n = len(out_bytes)
+    return LayerProfile(
+        name="synth", n_boundaries=n + 1, input_bytes=input_bytes,
+        out_bytes=[input_bytes] + list(out_bytes),
+        cum_flops=[0.0] + [1e9 * (i + 1) for i in range(n)],
+        act_peak_bytes=[input_bytes] * (n + 1),
+        prefix_param_bytes=[1e6 * i for i in range(n + 1)],
+        model_param_bytes=1e6 * n,
+        freeze_index=freeze,
+    )
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    out_bytes=st.lists(st.floats(1e3, 1e8), min_size=2, max_size=30),
+    input_bytes=st.floats(1e3, 1e8),
+    bw=st.floats(1e6, 1e10),
+    batch=st.integers(1, 8192),
+)
+def test_alg1_invariants(out_bytes, input_bytes, bw, batch):
+    freeze = max(1, len(out_bytes) * 3 // 4)
+    prof = synth_profile(out_bytes, input_bytes, freeze)
+    hapi = HapiConfig(network_bandwidth=bw)
+    d = choose_split(prof, hapi, batch)
+
+    # split never exceeds the freeze index (no training pushed down)
+    assert 1 <= d.split_index <= freeze
+    cands = candidate_boundaries(prof)
+    # every candidate output <= app input (phase 1 criterion)
+    for c in cands:
+        assert prof.out_bytes[c] <= input_bytes
+    # the winner is either the earliest under-threshold candidate or freeze
+    C = bw * hapi.window_s
+    under = [c for c in cands if prof.out_bytes[c] * batch < C]
+    if under:
+        assert d.split_index == under[0]
+    else:
+        assert d.split_index == freeze
+
+
+def test_bandwidth_moves_split_earlier():
+    """Paper Table 4: abundant bandwidth -> earlier split (bigger outputs
+    tolerated); scarce bandwidth -> later split."""
+    out = [9e6, 8e6, 5e6, 3e6, 2e6, 1e6, 9e5, 5e5]
+    prof = synth_profile(out, input_bytes=1e7, freeze=8)
+    splits = []
+    for bw_gbps in [0.05, 0.5, 1, 3, 10]:
+        d = choose_split(prof, HapiConfig(network_bandwidth=bw_gbps * 1e9 / 8), 100)
+        splits.append(d.split_index)
+    assert splits == sorted(splits, reverse=True)  # non-increasing
+    assert splits[0] > splits[-1]
+
+
+def test_batch_size_moves_split_later():
+    """Paper §5.4: larger training batch -> later (or equal) split."""
+    out = [9e6, 8e6, 5e6, 3e6, 2e6, 1e6, 9e5, 5e5]
+    prof = synth_profile(out, input_bytes=1e7, freeze=8)
+    hapi = HapiConfig(network_bandwidth=1e9 / 8)
+    s_small = choose_split(prof, hapi, 10).split_index
+    s_big = choose_split(prof, hapi, 1000).split_index
+    assert s_big >= s_small
+
+
+def test_compression_allows_earlier_split():
+    out = [9e6, 8e6, 5e6, 3e6, 2e6, 1e6, 9e5, 5e5]
+    prof = synth_profile(out, input_bytes=1e7, freeze=8)
+    plain = choose_split(prof, HapiConfig(network_bandwidth=1e9 / 8), 200)
+    comp = choose_split(
+        prof, HapiConfig(network_bandwidth=1e9 / 8, compress_transfer=True), 200
+    )
+    assert comp.split_index <= plain.split_index
+    assert comp.wire_bytes_per_iter <= plain.wire_bytes_per_iter
+
+
+def test_token_lm_defaults_to_freeze():
+    """Token-input LMs: every boundary activation exceeds the raw tokens, so
+    phase 1 is empty and Alg. 1 defaults to the freeze index (DESIGN.md §4)."""
+    cfg = get_config("qwen3-32b")
+    prof = profile_lm(cfg, 4096)
+    d = choose_split(prof, HapiConfig(), 256)
+    assert d.candidates == []
+    assert d.split_index == cfg.freeze_index
+
+
+def test_vision_model_has_candidates():
+    from repro.models.vision import resnet18
+
+    prof = profile_layered(resnet18(10))
+    cands = candidate_boundaries(prof)
+    assert cands, "resnet18 must expose under-input split candidates (Fig. 2)"
+    d = choose_split(prof, HapiConfig(network_bandwidth=1e9 / 8), 100)
+    assert d.split_index in cands or d.split_index == prof.freeze_index
+
+
+def test_cost_optimal_never_worse():
+    from repro.core.cost_model import roofline_epoch_time
+
+    out = [9e6, 8e6, 5e6, 3e6, 2e6, 1e6, 9e5, 5e5]
+    prof = synth_profile(out, input_bytes=1e7, freeze=8)
+    hapi = HapiConfig(network_bandwidth=1e9 / 8)
+    d_paper = choose_split(prof, hapi, 100)
+    d_opt = choose_split_cost_optimal(
+        prof, hapi, 100, cos_flops=1e14, client_flops=1e14
+    )
+    t = lambda s: roofline_epoch_time(
+        prof, s, 3200, 100, bandwidth=hapi.network_bandwidth,
+        cos_flops=1e14, client_flops=1e14,
+    ).total
+    assert t(d_opt.split_index) <= t(d_paper.split_index) + 1e-9

@@ -1,0 +1,80 @@
+"""TierPlan execution: extract/tune equivalence, compression, wire bytes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, smoke_model
+from repro.config import HapiConfig, ShapeConfig
+from repro.core.tier_split import (
+    TierPlan,
+    largest_divisor_leq,
+    make_extract_fn,
+    make_tune_loss_fn,
+    plan_tiers,
+    wire_bytes,
+)
+from repro.core.splitter import SplitDecision
+
+
+def _plan(split, cos_batch, compress=False):
+    return TierPlan(split, cos_batch, compress, SplitDecision(split, 0, 0, [], "t"))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "moonshot-v1-16b-a3b", "mamba2-1.3b"])
+@pytest.mark.parametrize("cos_batch", [2, 4, 8])
+def test_extract_tune_equals_monolithic(arch, cos_batch):
+    cfg, model, params = smoke_model(arch)
+    batch = make_batch(cfg, batch=8, seq=32)
+    ref = float(model.loss(params, batch))
+    plan = _plan(split=1, cos_batch=cos_batch)
+    frozen, trainable = model.split_params(params, plan.split)
+    acts = make_extract_fn(model, plan)(frozen, batch)
+    got = float(make_tune_loss_fn(model, plan)(trainable, acts, batch))
+    assert abs(got - ref) < 1e-3, "COS batch size must not change the loss"
+
+
+def test_cos_batch_invariance():
+    """Paper §5.1: feature extraction batch size does not affect results."""
+    cfg, model, params = smoke_model("mistral-nemo-12b")
+    batch = make_batch(cfg, batch=8, seq=32)
+    frozen, trainable = model.split_params(params, 1)
+    outs = []
+    for cb in (1, 2, 4, 8):
+        acts = make_extract_fn(model, _plan(1, cb))(frozen, batch)
+        outs.append(np.asarray(acts, np.float32))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5)
+
+
+def test_int8_boundary_loss_and_wire():
+    cfg, model, params = smoke_model("qwen3-32b")
+    batch = make_batch(cfg, batch=8, seq=32)
+    ref = float(model.loss(params, batch))
+    frozen, trainable = model.split_params(params, 1)
+
+    plain = make_extract_fn(model, _plan(1, 4))(frozen, batch)
+    comp = make_extract_fn(model, _plan(1, 4, compress=True))(frozen, batch)
+    loss_c = float(make_tune_loss_fn(model, _plan(1, 4, compress=True))(
+        trainable, comp, batch))
+    assert abs(loss_c - ref) < 0.05
+    assert wire_bytes(_plan(1, 4, True), comp) < 0.6 * wire_bytes(_plan(1, 4), plain)
+
+
+def test_plan_tiers_respects_budget():
+    cfg, _, _ = smoke_model("qwen3-32b")
+    shape = ShapeConfig("t", "train", 64, 32)
+    tiny = HapiConfig(cos_hbm_budget=1e6, cos_batch_min=1)
+    big = HapiConfig(cos_hbm_budget=1e12, cos_batch_min=1)
+    p_small = plan_tiers(cfg, shape, tiny, local_batch=32)
+    p_big = plan_tiers(cfg, shape, big, local_batch=32)
+    assert p_small.cos_batch <= p_big.cos_batch
+    assert 32 % p_small.cos_batch == 0  # must divide the batch
+
+
+@pytest.mark.parametrize("n,cap,expect", [(16, 12, 8), (16, 16, 16), (7, 3, 1),
+                                          (12, 5, 4), (8, 1, 1)])
+def test_largest_divisor(n, cap, expect):
+    assert largest_divisor_leq(n, cap) == expect

@@ -1,0 +1,15 @@
+"""Shared synthetic profiles for tests."""
+from repro.core.profiler import LayerProfile
+
+
+def tiny_profile(n=8, input_bytes=1e7):
+    out = [9e6, 8e6, 5e6, 3e6, 2e6, 1e6, 9e5, 5e5][:n]
+    return LayerProfile(
+        name="tiny", n_boundaries=n + 1, input_bytes=input_bytes,
+        out_bytes=[input_bytes] + out,
+        cum_flops=[0.0] + [1e9 * (i + 1) for i in range(n)],
+        act_peak_bytes=[input_bytes] + [6 * b for b in out],
+        prefix_param_bytes=[1e6 * i for i in range(n + 1)],
+        model_param_bytes=1e6 * n,
+        freeze_index=max(1, n * 3 // 4),
+    )
