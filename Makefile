@@ -1,0 +1,30 @@
+# CI entry points. `make ci` is what a checkin must keep green.
+PY := PYTHONPATH=src python
+
+.PHONY: ci tier1 fleet collect fast bench-fleet
+
+# collect + the fast fleet scenario tests first (fail fast on the
+# most-churned layer), then the full tier-1 run.
+ci: collect fleet tier1
+
+# Fail fast on collection regressions (e.g. a hard import of an
+# uninstalled dependency aborting whole test modules).
+collect:
+	$(PY) -m pytest -q --collect-only >/dev/null
+
+# The repo's tier-1 command (see ROADMAP.md).
+tier1:
+	$(PY) -m pytest -x -q
+
+# Fleet scenario tests only (determinism, kill/re-issue, fairness).
+fleet:
+	$(PY) -m pytest -x -q tests/test_fleet.py
+
+# Tier-1 without the slow calibration/e2e tests.
+fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+# 1->8 server scaling sweep; exits non-zero unless throughput is
+# monotonic and the seeded event log reproduces.
+bench-fleet:
+	$(PY) benchmarks/fleet_scaling.py --check-determinism

@@ -1,0 +1,138 @@
+"""Fleet scaling sweep: served throughput and split-choice quality as the
+COS grows from 1 to 8 stateless server replicas.
+
+    PYTHONPATH=src python benchmarks/fleet_scaling.py [--servers 1,2,4,8]
+        [--tenants 3] [--seed 0] [--check-determinism]
+
+A multi-tenant burst workload (every tenant POSTs its whole epoch at
+once, arrivals jittered by the seeded simulator RNG) is replayed on the
+shared discrete-event simulator for each fleet size. Reported per fleet
+size:
+
+* **throughput** — served samples per virtual second (total samples /
+  fleet makespan); must grow monotonically while the workload is
+  accelerator-bound,
+* **split quality** — the cost-optimal split's roofline epoch time
+  divided by the Alg. 1 split's (in (0, 1]; 1.0 = the paper's split
+  choice is optimal under the fleet's bandwidth, 0.5 = it takes 2x the
+  optimal epoch time).
+
+Same seed => byte-identical simulator event log (asserted by
+``--check-determinism`` and tests/test_fleet.py).
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+
+from repro.config import HapiConfig
+from repro.core.batch_adapt import per_server_adaptation_stats
+from repro.core.cost_model import roofline_epoch_time
+from repro.core.profiler import profile_layered
+from repro.core.splitter import choose_split, choose_split_cost_optimal
+from repro.cos.clock import Simulator
+from repro.cos.fleet import HapiFleet
+from repro.cos.objectstore import synthetic_image_store
+from repro.cos.server import PostRequest
+from repro.models.vision import alexnet, resnet18, vgg11
+
+TENANT_MODELS = [("alexnet", alexnet), ("resnet18", resnet18), ("vgg11", vgg11)]
+
+
+def run_fleet(n_servers: int, n_tenants: int = 3, seed: int = 0,
+              train_batch: int = 1000) -> Dict:
+    """One burst workload on an ``n_servers`` fleet; returns metrics +
+    the full simulator event log (for determinism checks)."""
+    sim = Simulator(seed)
+    store = synthetic_image_store()   # content seed fixed; sim seed varies
+    fleet = HapiFleet(store, n_servers=n_servers, sim=sim,
+                      n_accelerators=2, flops_per_accel=65e12,
+                      hbm_per_accel=16e9)
+    hapi = HapiConfig(network_bandwidth=1e9 / 8)
+    objects = store.object_names("imagenet")
+
+    profiles, splits = {}, {}
+    rid = 0
+    for t in range(n_tenants):
+        mname, build = TENANT_MODELS[t % len(TENANT_MODELS)]
+        prof = profiles.setdefault(mname, profile_layered(build(1000)))
+        split = choose_split(prof, hapi, train_batch).split_index
+        splits[t] = (mname, split)
+        jitter = float(sim.rng.uniform(0.0, 0.005))
+        for oname in objects:
+            rid += 1
+            fleet.submit(PostRequest(
+                req_id=rid, tenant=t, model_key=mname, split=split,
+                object_name=oname, b_max=min(train_batch, hapi.cos_batch),
+                profile=prof, arrival=jitter,
+            ))
+    responses = fleet.drain()
+
+    total_samples = sum(store.objects[r.object_name].n_samples
+                       for r in responses)
+    makespan = max(r.finished for r in responses)
+    quality = {}
+    for t, (mname, split) in splits.items():
+        prof = profiles[mname]
+        opt = choose_split_cost_optimal(prof, hapi, train_batch,
+                                        cos_flops=65e12, client_flops=65e12)
+        epoch = lambda s: roofline_epoch_time(
+            prof, s, len(objects) * 1000, train_batch,
+            bandwidth=hapi.network_bandwidth,
+            cos_flops=65e12, client_flops=65e12).total
+        quality[t] = epoch(opt.split_index) / max(epoch(split), 1e-12)
+    return {
+        "n_servers": n_servers,
+        "n_tenants": n_tenants,
+        "served": len(responses),
+        "throughput": total_samples / makespan,
+        "makespan": makespan,
+        "served_by_server": dict(sorted(fleet.served_by_server.items())),
+        "tenant_throughput": {t: s.throughput
+                              for t, s in sorted(fleet.tenant_stats.items())},
+        "split_quality": quality,
+        "adaptation": per_server_adaptation_stats(
+            fleet.adapt_results_by_server, hapi.cos_batch),
+        "event_log": fleet.sim.log.digest(),
+    }
+
+
+def sweep(servers: List[int], n_tenants: int, seed: int) -> List[Dict]:
+    rows = []
+    for n in servers:
+        r = run_fleet(n, n_tenants=n_tenants, seed=seed)
+        rows.append(r)
+        q = min(r["split_quality"].values())
+        print(f"servers={n}  throughput={r['throughput']:10.1f} samples/s  "
+              f"makespan={r['makespan']:7.3f}s  "
+              f"split-quality>={q:.3f}  "
+              f"per-server={list(r['served_by_server'].values())}")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--servers", default="1,2,4,8")
+    ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check-determinism", action="store_true")
+    args = ap.parse_args(argv)
+    servers = [int(s) for s in args.servers.split(",")]
+
+    rows = sweep(servers, args.tenants, args.seed)
+
+    ths = [r["throughput"] for r in rows]
+    mono = all(b >= a for a, b in zip(ths, ths[1:]))
+    print(f"monotonic 1->{servers[-1]}: {mono}")
+    if args.check_determinism:
+        again = run_fleet(servers[-1], n_tenants=args.tenants, seed=args.seed)
+        same = again["event_log"] == rows[-1]["event_log"]
+        print(f"determinism (seed {args.seed}): {same}")
+        if not same:
+            return 1
+    return 0 if mono else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

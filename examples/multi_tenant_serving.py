@@ -1,52 +1,64 @@
-"""Multi-tenant COS serving with batch adaptation (paper §7.5/§7.7).
+"""Multi-tenant COS serving with batch adaptation, on a server fleet
+(paper §7.5/§7.7 scaled out).
 
-    PYTHONPATH=src python examples/multi_tenant_serving.py
+    PYTHONPATH=src python examples/multi_tenant_serving.py [--servers 3]
 
-Ten tenants fine-tune different models against one storage tier; the
-server's Eq. 4 batch adaptation packs their feature-extraction requests
-into the two COS accelerators without OOM. Live JAX execution for one
-tenant demonstrates the real compute path.
+Ten tenants fine-tune different models against one storage tier. Their
+feature-extraction POSTs are routed by a :class:`HapiFleet` across
+stateless server replicas (replica-aware + least-loaded), each replica
+running the paper's Eq. 4 batch adaptation over its own accelerators.
+Everything shares one seeded discrete-event simulator, so the printout
+is bit-reproducible run to run.
 """
+import argparse
+
 import numpy as np
 
 from repro.config import HapiConfig
-from repro.core.batch_adapt import adaptation_stats
+from repro.core.batch_adapt import adaptation_stats, per_server_adaptation_stats
 from repro.core.profiler import profile_layered
 from repro.cos.client import HapiClient
 from repro.cos.clock import Link
-from repro.cos.objectstore import ObjectStore
-from repro.cos.server import HapiServer
+from repro.cos.fleet import HapiFleet
+from repro.cos.objectstore import synthetic_image_store
 from repro.models.vision import PAPER_MODELS
 
 
-def main():
-    rng = np.random.default_rng(0)
-    store = ObjectStore()
-    store.put_dataset("imagenet", {
-        "x": rng.normal(size=(4000, 8, 8, 3)).astype(np.float32),
-        "y": rng.integers(0, 1000, size=(4000,)).astype(np.int32),
-    }, object_size=1000)
-    for o in store.objects.values():
-        o.nbytes = o.n_samples * 110_000
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--servers", type=int, default=3)
+    ap.add_argument("--tenants", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
 
-    server = HapiServer(store, n_accelerators=2, flops_per_accel=65e12)
+    store = synthetic_image_store("imagenet", n_samples=4000)
+
+    fleet = HapiFleet(store, n_servers=args.servers, seed=args.seed,
+                      n_accelerators=2, flops_per_accel=65e12)
     profiles = {n: profile_layered(b(1000)) for n, b in PAPER_MODELS.items()}
 
     names = list(PAPER_MODELS)
     jcts = []
-    for t in range(10):
+    for t in range(args.tenants):
         model_key = names[t % len(names)]          # round-robin (paper §7.5)
         link = Link(name=f"wan{t}", bandwidth=1e9 / 8)
-        client = HapiClient(server, link, profiles[model_key], HapiConfig(),
+        client = HapiClient(fleet, link, profiles[model_key], HapiConfig(),
                             model_key, tenant=t, client_flops=65e12)
         res = client.run_epoch("imagenet", train_batch=1000, max_iterations=1)
         jcts.append(res.execution_time)
+        served = res.served_by_server
         print(f"tenant {t:2d} ({model_key:12s}) split={res.split:2d} "
-              f"jct={res.execution_time:6.2f}s wire={res.total_wire_bytes/1e6:7.1f} MB")
+              f"jct={res.execution_time:6.2f}s "
+              f"wire={res.total_wire_bytes/1e6:7.1f} MB "
+              f"servers={dict(sorted(served.items()))}")
 
-    pct, red = adaptation_stats(server.adapt_results, 1000)
+    pct, red = adaptation_stats(fleet.adapt_results, 1000)
     print(f"\nmakespan {max(jcts):.2f}s | mean JCT {np.mean(jcts):.2f}s | "
           f"batch-adapted {pct:.0f}% of requests (avg -{red:.0f}%)")
+    print(f"POSTs per replica: {dict(sorted(fleet.served_by_server.items()))}")
+    for sid, (p, r) in per_server_adaptation_stats(
+            fleet.adapt_results_by_server, 1000).items():
+        print(f"  server {sid}: adapted {p:.0f}% (avg -{r:.0f}%)")
 
 
 if __name__ == "__main__":

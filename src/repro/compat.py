@@ -1,0 +1,52 @@
+"""Version-compatibility shims for the pinned JAX toolchain.
+
+The repo targets the modern JAX API surface (``jax.shard_map`` with
+``check_vma``; ``Compiled.cost_analysis()`` returning a dict).  The baked
+container image pins jax 0.4.x, where shard_map still lives under
+``jax.experimental`` (with ``check_rep``) and ``cost_analysis()`` returns
+a one-element list.  Everything that touches either API goes through
+here so the code runs unchanged on both sides of the deprecation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+
+if hasattr(jax, "shard_map"):                     # jax >= 0.6
+    _shard_map_impl = jax.shard_map
+    _VMA_KW = "check_vma"
+else:                                             # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _VMA_KW = "check_rep"
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None, **kw):
+    """``jax.shard_map`` on any supported JAX version.
+
+    Accepts the modern ``check_vma`` keyword and translates it to the
+    legacy ``check_rep`` when running on 0.4.x.  Usable directly or via
+    ``functools.partial(shard_map, mesh=..., ...)`` like the original.
+    """
+    if f is None:
+        return functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma,
+                                 **kw)
+    if check_vma is not None:
+        kw[_VMA_KW] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
+
+
+def cost_analysis_dict(compiled) -> Dict[str, Any]:
+    """``Compiled.cost_analysis()`` as a flat dict on every JAX version.
+
+    0.4.x returns ``[{...}]`` (one entry per partition); newer versions
+    return the dict directly (or None for some backends).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

@@ -21,7 +21,7 @@ Invariants (property-tested in tests/test_batch_adapt.py):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 
 @dataclass(frozen=True)
@@ -118,3 +118,16 @@ def adaptation_stats(results: List[AdaptResult], default_batch: int) -> Tuple[fl
     if n == 0:
         return 0.0, 0.0
     return 100.0 * reduced / n, (total_red / reduced if reduced else 0.0)
+
+
+def per_server_adaptation_stats(
+    results_by_server: Dict[int, List[AdaptResult]],
+    default_batch: int,
+) -> Dict[int, Tuple[float, float]]:
+    """Fleet view of Table 5: adaptation rounds run per server replica
+    (each against its own per-accelerator budgets), so the reduction
+    profile is reported per server too."""
+    return {
+        sid: adaptation_stats(results, default_batch)
+        for sid, results in sorted(results_by_server.items())
+    }

@@ -33,6 +33,7 @@ class IterationStats:
     wire_bytes: float
     n_posts: int
     reissued: int = 0
+    served_by_server: Dict[int, int] = field(default_factory=dict)
 
 
 @dataclass
@@ -48,11 +49,27 @@ class EpochResult:
     def n_iterations(self) -> int:
         return len(self.iterations)
 
+    @property
+    def served_by_server(self) -> Dict[int, int]:
+        """POSTs served per fleet replica over the epoch (single servers
+        report everything under id 0)."""
+        out: Dict[int, int] = {}
+        for it in self.iterations:
+            for sid, n in it.served_by_server.items():
+                out[sid] = out.get(sid, 0) + n
+        return out
+
 
 class HapiClient:
+    """``server`` may be a single :class:`HapiServer` or a
+    :class:`~repro.cos.fleet.HapiFleet` — both expose the same
+    ``store``/``submit``/``drain`` surface. When the server side carries a
+    shared :class:`~repro.cos.clock.Simulator`, the client joins it so
+    its link and accelerator show up in the fleet-wide trace."""
+
     def __init__(
         self,
-        server: HapiServer,
+        server: "HapiServer",
         link: Link,
         profile: LayerProfile,
         hapi: HapiConfig,
@@ -80,6 +97,10 @@ class HapiClient:
         self.accel = Accelerator(name=f"client{tenant}", flops=eff_flops, hbm=client_hbm)
         self.has_accelerator = has_accelerator
         self.mxu_efficiency = mxu_efficiency
+        self.sim = getattr(server, "sim", None)
+        if self.sim is not None:
+            self.accel.attach(self.sim)
+            self.link.attach(self.sim)
         self.log = EventLog()
         self._next_req = tenant * 1_000_000
         # Split once per application (paper: before start).
@@ -173,6 +194,7 @@ class HapiClient:
                         model_key=dup.model_key, split=dup.split,
                         object_name=dup.object_name, b_max=dup.b_max,
                         profile=dup.profile, arrival=d.arrival, compress=dup.compress,
+                        adaptable=dup.adaptable,
                     )
                     self.server.submit(dup)
                     redo = self.server.drain(now=d.arrival)
@@ -180,8 +202,10 @@ class HapiClient:
                         done[i] = redo[0]
                         reissued += 1
 
-        # Reorder to the request order (learning trajectory preserved).
-        done.sort(key=lambda d: d.req_id)
+        # ``done`` is already in request order (built from ``reqs``; a
+        # winning re-issue replaces its straggler in place), which is what
+        # preserves the learning trajectory — sorting by req_id would file
+        # re-issued duplicates (+500_000) at the end.
 
         # Pull activations over the bottleneck link.
         t_data = t
@@ -198,7 +222,13 @@ class HapiClient:
         if self.train_fn is not None and all(d.acts is not None for d in done):
             self.train_fn([d.acts for d in done])
         self.log.add(t_end, "iteration", f"{it}")
-        return IterationStats(it, t, t_end, wire, len(group), reissued)
+        if self.sim is not None:
+            self.sim.record(t_end, "iteration", f"t{self.tenant} it={it}")
+        by_server: Dict[int, int] = {}
+        for d in done:
+            by_server[d.server_id] = by_server.get(d.server_id, 0) + 1
+        return IterationStats(it, t, t_end, wire, len(group), reissued,
+                              served_by_server=by_server)
 
 
 class BaselineClient:

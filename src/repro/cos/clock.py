@@ -1,4 +1,5 @@
-"""Deterministic virtual clock + resource timeline for the COS simulation.
+"""Deterministic discrete-event simulator + resource timelines for the
+COS runtime.
 
 Benchmarks must be reproducible and fast on CPU, so time is simulated:
 every resource (network link, accelerator slice, storage node) is a
@@ -7,12 +8,96 @@ by modeled durations instead of sleeping. The same server/client code
 also executes the *real* JAX computation (live mode) — the clock only
 decides what the wall would have shown on the paper's testbed or a TPU
 pod.
+
+The :class:`Simulator` is the single source of truth for virtual time in
+a fleet run: one event queue, deterministic ordering (ties broken by
+insertion sequence), a seedable RNG, and a trace log shared by the
+object store, every server replica, and every client. Two runs with the
+same seed produce byte-identical traces — the property the fleet
+scenario tests assert.
 """
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+
+class EventLog:
+    def __init__(self) -> None:
+        self.events: List[Tuple[float, str, str]] = []
+
+    def add(self, t: float, kind: str, detail: str = "") -> None:
+        self.events.append((t, kind, detail))
+
+    def filter(self, kind: str) -> List[Tuple[float, str, str]]:
+        return [e for e in self.events if e[1] == kind]
+
+    def digest(self) -> Tuple[Tuple[float, str, str], ...]:
+        """Hashable snapshot for determinism checks (same seed => equal)."""
+        return tuple(self.events)
+
+
+class Simulator:
+    """Single-queue discrete-event simulator.
+
+    Two roles:
+
+    * **Event queue** — control events (server kills/restarts, autoscaler
+      ticks, request arrivals) are scheduled with :meth:`schedule` and
+      fired in deterministic ``(time, insertion-seq)`` order by
+      :meth:`run_until`.
+    * **Shared trace** — components :meth:`record` every modeled action
+      (reads, serves, routes, scale events) into one log, so a whole
+      fleet run has a single totally-ordered, seed-reproducible history.
+    """
+
+    def __init__(self, seed: int = 0) -> None:
+        import numpy as np
+
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.now = 0.0
+        self.log = EventLog()
+        self._queue: List[Tuple[float, int, str, str, Optional[Callable]]] = []
+        self._seq = 0
+
+    # -- event queue ---------------------------------------------------------
+    def schedule(self, t: float, kind: str, detail: str = "",
+                 callback: Optional[Callable[[], None]] = None) -> None:
+        """Enqueue a control event at absolute virtual time ``t``."""
+        heapq.heappush(self._queue, (t, self._seq, kind, detail, callback))
+        self._seq += 1
+
+    def next_event_time(self) -> Optional[float]:
+        return self._queue[0][0] if self._queue else None
+
+    def run_until(self, t: float) -> int:
+        """Fire every queued event with time <= t; returns #fired.
+
+        Advances :attr:`now` monotonically (it never moves backwards even
+        if ``t`` is in the past — resources may have reserved ahead)."""
+        fired = 0
+        while self._queue and self._queue[0][0] <= t:
+            et, _, kind, detail, cb = heapq.heappop(self._queue)
+            self.now = max(self.now, et)
+            self.log.add(et, kind, detail)
+            if cb is not None:
+                cb()
+            fired += 1
+        self.now = max(self.now, t)
+        return fired
+
+    def run(self) -> int:
+        """Drain the entire event queue (clock ends at the last event)."""
+        fired = 0
+        while self._queue:
+            fired += self.run_until(self._queue[0][0])
+        return fired
+
+    # -- shared trace --------------------------------------------------------
+    def record(self, t: float, kind: str, detail: str = "") -> None:
+        self.log.add(t, kind, detail)
 
 
 @dataclass
@@ -21,6 +106,11 @@ class Timeline:
     name: str
     busy_until: float = 0.0
     busy_time: float = 0.0
+    sim: Optional[Simulator] = None
+
+    def attach(self, sim: Simulator) -> "Timeline":
+        self.sim = sim
+        return self
 
     def reserve(self, start: float, duration: float) -> Tuple[float, float]:
         """Schedule work at >= start; returns (actual_start, end)."""
@@ -28,6 +118,8 @@ class Timeline:
         e = s + duration
         self.busy_until = e
         self.busy_time += duration
+        if self.sim is not None:
+            self.sim.record(s, "busy", f"{self.name} {duration:.3e}")
         return s, e
 
 
@@ -61,14 +153,3 @@ class Accelerator(Timeline):
 
     def free(self, nbytes: float) -> None:
         self.mem_used = max(0.0, self.mem_used - nbytes)
-
-
-class EventLog:
-    def __init__(self) -> None:
-        self.events: List[Tuple[float, str, str]] = []
-
-    def add(self, t: float, kind: str, detail: str = "") -> None:
-        self.events.append((t, kind, detail))
-
-    def filter(self, kind: str) -> List[Tuple[float, str, str]]:
-        return [e for e in self.events if e[1] == kind]

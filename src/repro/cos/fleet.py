@@ -1,0 +1,346 @@
+"""Multi-server, multi-tenant COS fleet front-end.
+
+The paper's server is stateless by design (§5.2): nothing survives a
+request, so horizontal scaling is "just add queues". This module is that
+step — a :class:`HapiFleet` that fronts N :class:`HapiServer` replicas
+with:
+
+* **replica-aware + least-loaded routing** — a POST prefers replicas
+  co-located with a storage node holding the object (server *i* sits
+  next to storage node ``i % n_nodes``, Swift-style), breaking ties by
+  queue depth;
+* **per-tenant fair queueing** — pending POSTs are kept in per-tenant
+  queues and dispatched round-robin across tenants, so one tenant's
+  burst cannot starve another;
+* **kill/restart elasticity** — the fleet tracks which replica holds
+  each in-flight request; when a replica dies its queue is lost
+  (stateless crash) and the fleet re-issues the lost requests to the
+  survivors, exactly the client re-issue the paper relies on;
+* **queue-depth autoscaling** — a simple hysteresis policy adds a
+  replica when mean depth per alive server crosses a high-watermark and
+  retires an idle one below the low-watermark.
+
+All replicas, the object store, and the clients share one
+:class:`~repro.cos.clock.Simulator`: a single event queue with
+deterministic ordering, so the same seed reproduces the same trace
+byte-for-byte (asserted by tests/test_fleet.py and
+benchmarks/fleet_scaling.py).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.cos.clock import Simulator
+from repro.cos.objectstore import ObjectStore
+from repro.cos.server import HapiServer, PostRequest, PostResponse
+
+
+@dataclass(frozen=True)
+class AutoscalePolicy:
+    """Queue-depth hysteresis autoscaler (depth = waiting POSTs per alive
+    replica, averaged over the fleet)."""
+    min_servers: int = 1
+    max_servers: int = 8
+    scale_up_depth: float = 8.0
+    scale_down_depth: float = 0.5
+    cooldown_rounds: int = 4
+
+
+@dataclass
+class TenantStats:
+    posts: int = 0
+    samples: int = 0
+    act_bytes: float = 0.0
+    first_arrival: float = float("inf")
+    last_finish: float = 0.0
+
+    @property
+    def throughput(self) -> float:
+        """Served samples per virtual second over the tenant's span."""
+        span = self.last_finish - self.first_arrival
+        return self.samples / span if span > 0 else 0.0
+
+
+class HapiFleet:
+    """Drop-in for :class:`HapiServer` from the client's point of view
+    (``store`` / ``submit`` / ``drain`` / ``adapt_results``) that routes
+    across N stateless replicas."""
+
+    def __init__(
+        self,
+        store: ObjectStore,
+        n_servers: int = 2,
+        *,
+        sim: Optional[Simulator] = None,
+        seed: int = 0,
+        fair_queueing: bool = True,
+        autoscale: Optional[AutoscalePolicy] = None,
+        **server_kwargs,
+    ) -> None:
+        self.sim = sim if sim is not None else Simulator(seed)
+        self.store = store.attach_sim(self.sim)
+        self._server_kwargs = dict(server_kwargs)
+        self.servers: List[HapiServer] = [
+            HapiServer(store, server_id=i, sim=self.sim, **server_kwargs)
+            for i in range(n_servers)
+        ]
+        self.fair_queueing = fair_queueing
+        self.autoscale = autoscale
+        self._as_cooldown = 0
+        # Per-tenant FIFO queues, dispatched round-robin by tenant id.
+        self._pending: Dict[int, Deque[PostRequest]] = {}
+        self._inflight: Dict[int, int] = {}          # req_id -> server index
+        self._req_by_id: Dict[int, PostRequest] = {}
+        self.reissued = 0
+        self.rejected: List[int] = []
+        self.served_by_server: Dict[int, int] = {}
+        self.tenant_stats: Dict[int, TenantStats] = {}
+        self._vtime = 0.0                            # fleet-wide virtual time
+
+    # -- topology ------------------------------------------------------------
+    def _alive(self) -> List[HapiServer]:
+        return [s for s in self.servers if s.alive]
+
+    @property
+    def n_alive(self) -> int:
+        return len(self._alive())
+
+    @property
+    def alive(self) -> bool:
+        return self.n_alive > 0
+
+    @property
+    def adapt_results(self):
+        return [r for s in self.servers for r in s.adapt_results]
+
+    @property
+    def adapt_results_by_server(self) -> Dict[int, list]:
+        return {s.server_id: list(s.adapt_results) for s in self.servers}
+
+    # -- elasticity ------------------------------------------------------------
+    def kill(self, server_id: int) -> None:
+        """Crash one replica. Its queue is lost (stateless crash); the
+        fleet re-issues the requests it was holding immediately, so a
+        restart of the same replica before the next drain cannot strand
+        them."""
+        self.servers[server_id].kill()
+        self.sim.record(self._vtime, "kill", f"s{server_id}")
+        self._reissue_lost()
+
+    def restart(self, server_id: int) -> None:
+        self.servers[server_id].restart()
+        self.sim.record(self._vtime, "restart", f"s{server_id}")
+
+    def add_server(self) -> HapiServer:
+        """Scale up: revive a dead replica if any, else spawn a fresh one
+        (stateless servers make both identical)."""
+        for s in self.servers:
+            if not s.alive:
+                s.restart()
+                self.sim.record(self._vtime, "scale-up", f"s{s.server_id}")
+                return s
+        s = HapiServer(self.store, server_id=len(self.servers), sim=self.sim,
+                       **self._server_kwargs)
+        self.servers.append(s)
+        self.sim.record(self._vtime, "scale-up", f"s{s.server_id}")
+        return s
+
+    def remove_server(self) -> Optional[HapiServer]:
+        """Scale down: retire the idle replica with the highest id (its
+        queue must be empty — stateless, nothing to migrate)."""
+        idle = [s for s in self._alive() if not s.queue]
+        if len(self._alive()) <= (self.autoscale.min_servers
+                                  if self.autoscale else 1) or not idle:
+            return None
+        victim = max(idle, key=lambda s: s.server_id)
+        victim.kill()
+        self.sim.record(self._vtime, "scale-down", f"s{victim.server_id}")
+        return victim
+
+    # -- intake + routing ------------------------------------------------------
+    def submit(self, req: PostRequest) -> None:
+        if not self.alive:
+            raise ConnectionError("hapi fleet down")
+        self._req_by_id[req.req_id] = req
+        self._pending.setdefault(req.tenant, deque()).append(req)
+        ts = self.tenant_stats.setdefault(req.tenant, TenantStats())
+        ts.first_arrival = min(ts.first_arrival, req.arrival)
+        self.sim.record(req.arrival, "post", f"t{req.tenant} {req.object_name}")
+
+    def _route(self, req: PostRequest) -> HapiServer:
+        """Replica-aware least-loaded: prefer replicas co-located with a
+        storage node holding the object; tie-break by queue depth then id."""
+        alive = self._alive()
+        if not alive:
+            raise ConnectionError("hapi fleet down")
+        n_nodes = len(self.store.nodes)
+        replicas = set(self.store.replicas(req.object_name))
+        colocated = [s for s in alive if s.server_id % n_nodes in replicas]
+        cands = colocated or alive
+
+        # Least-loaded with tenant spreading: under fair queueing, prefer
+        # the replica holding the fewest of this tenant's requests so every
+        # replica's queue interleaves tenants (one tenant must not own a
+        # whole replica while sharing the storage tier); then queue depth,
+        # earliest accelerator availability, id.
+        def load(s: HapiServer):
+            tenant_here = (sum(1 for q in s.queue if q.tenant == req.tenant)
+                           if self.fair_queueing else 0)
+            return (tenant_here, s.queue_depth(),
+                    min(a.busy_until for a in s.accels), s.server_id)
+
+        return min(cands, key=load)
+
+    def dispatch(self) -> int:
+        """Move pending requests onto replicas, round-robin across tenants
+        (fair queueing) or in submission order. Returns #dispatched."""
+        n = 0
+        if self.fair_queueing:
+            while any(self._pending.values()):
+                for tenant in sorted(self._pending):
+                    q = self._pending[tenant]
+                    if not q:
+                        continue
+                    n += self._dispatch_one(q.popleft())
+        else:
+            rest = sorted(
+                (r for q in self._pending.values() for r in q),
+                key=lambda r: (r.arrival, r.req_id),
+            )
+            self._pending.clear()
+            for req in rest:
+                n += self._dispatch_one(req)
+        return n
+
+    def _dispatch_one(self, req: PostRequest) -> int:
+        server = self._route(req)
+        server.submit(req)
+        self._inflight[req.req_id] = self.servers.index(server)
+        self.sim.record(max(self._vtime, req.arrival), "route",
+                        f"t{req.tenant} {req.object_name} -> s{server.server_id}")
+        return 1
+
+    def _reissue_lost(self) -> None:
+        lost = sorted(rid for rid, si in self._inflight.items()
+                      if not self.servers[si].alive)
+        for rid in lost:
+            req = self._req_by_id[rid]
+            del self._inflight[rid]
+            self._pending.setdefault(req.tenant, deque()).append(req)
+            self.reissued += 1
+            self.sim.record(self._vtime, "reissue",
+                            f"t{req.tenant} {req.object_name}")
+
+    def _rebalance(self) -> None:
+        """After a scale-up, pull excess queued work off overloaded
+        replicas back into the pending queues so dispatch re-routes it
+        across the grown fleet. Stateless servers make this free — a
+        queued request has no server-side footprint yet."""
+        alive = self._alive()
+        if len(alive) < 2:
+            return
+        total = sum(s.queue_depth() for s in alive)
+        target = -(-total // len(alive))          # ceil
+        moved = 0
+        for s in alive:
+            while s.queue_depth() > target:
+                req = s.queue.pop()               # newest queued first
+                self._inflight.pop(req.req_id, None)
+                self._pending.setdefault(req.tenant, deque()).append(req)
+                moved += 1
+        if moved:
+            self.sim.record(self._vtime, "rebalance", f"moved={moved}")
+
+    # -- autoscaling -----------------------------------------------------------
+    def _autoscale_step(self) -> None:
+        if self.autoscale is None:
+            return
+        if self._as_cooldown > 0:
+            self._as_cooldown -= 1
+            return
+        pol = self.autoscale
+        alive = self._alive()
+        waiting = sum(len(q) for q in self._pending.values()) + \
+            sum(s.queue_depth() for s in alive)
+        depth = waiting / max(len(alive), 1)
+        if depth > pol.scale_up_depth and len(alive) < pol.max_servers:
+            self.add_server()
+            self._rebalance()
+            self._as_cooldown = pol.cooldown_rounds
+        elif depth < pol.scale_down_depth and len(alive) > pol.min_servers:
+            if self.remove_server() is not None:
+                self._as_cooldown = pol.cooldown_rounds
+
+    # -- serving ----------------------------------------------------------------
+    def _work_remains(self) -> bool:
+        return bool(self._inflight) or any(self._pending.values())
+
+    def drain(self, now: float = 0.0) -> List[PostResponse]:
+        """Serve everything pending/in-flight across the fleet.
+
+        Replicas are stepped one batch-adaptation round at a time, always
+        the least-advanced replica first (deterministic event order), so
+        control events — kills, restarts, autoscaler decisions — interleave
+        with serving exactly like a discrete-event simulation step loop.
+        """
+        responses: List[PostResponse] = []
+        server_now: Dict[int, float] = {}
+        guard = 0
+        while self._work_remains():
+            guard += 1
+            assert guard < 100_000, "fleet scheduler livelock"
+            self.sim.run_until(max(now, self._vtime))
+            self._reissue_lost()
+            if not self.alive:
+                raise ConnectionError("hapi fleet down")
+            self.dispatch()
+            self._autoscale_step()
+            active = [s for s in self._alive() if s.queue]
+            if not active:
+                # in-flight on dead replicas only: loop re-issues them
+                continue
+            s = min(active, key=lambda s: (server_now.get(s.server_id, now),
+                                           s.server_id))
+            sn = server_now.get(s.server_id, now)
+            served, server_now[s.server_id] = s.drain_round(sn)
+            queued_ids = {r.req_id for r in s.queue}
+            for resp in served:
+                self._inflight.pop(resp.req_id, None)
+                self._account(resp)
+                responses.append(resp)
+            # A replica can reject a request that cannot fit even alone
+            # (paper OOM 'X'): it leaves the queue with no response.
+            sidx = self.servers.index(s)
+            for rid in sorted(self._inflight):
+                if self._inflight[rid] == sidx and rid not in queued_ids:
+                    del self._inflight[rid]
+                    self.rejected.append(rid)
+        # Controller tick on the now-idle fleet (lets scale-down happen
+        # between traffic bursts, not only under load).
+        self._autoscale_step()
+        return responses
+
+    def _account(self, resp: PostResponse) -> None:
+        self._vtime = max(self._vtime, resp.finished)
+        self.served_by_server[resp.server_id] = \
+            self.served_by_server.get(resp.server_id, 0) + 1
+        ts = self.tenant_stats.setdefault(resp.tenant, TenantStats())
+        ts.posts += 1
+        obj = self.store.objects.get(resp.object_name)
+        ts.samples += obj.n_samples if obj is not None else 0
+        ts.act_bytes += resp.act_bytes
+        ts.first_arrival = min(ts.first_arrival, resp.arrival)
+        ts.last_finish = max(ts.last_finish, resp.finished)
+
+    # -- metrics -----------------------------------------------------------------
+    def makespan(self) -> float:
+        return self._vtime
+
+    def served_total(self) -> int:
+        return sum(self.served_by_server.values())
+
+    def scale_events(self) -> List[Tuple[float, str, str]]:
+        return [e for e in self.sim.log.events
+                if e[1] in ("scale-up", "scale-down", "kill", "restart")]

@@ -13,7 +13,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.cos.clock import Link, Timeline
+from repro.cos.clock import Link, Simulator, Timeline
 
 
 @dataclass
@@ -38,6 +38,15 @@ class ObjectStore:
         ]
         self.replication = min(replication, n_storage_nodes)
         self._placement: Dict[str, List[int]] = {}
+        self.sim: Optional[Simulator] = None
+
+    def attach_sim(self, sim: Simulator) -> "ObjectStore":
+        """Join a shared discrete-event simulation: storage-node reads are
+        recorded into the fleet-wide trace."""
+        self.sim = sim
+        for node in self.nodes:
+            node.attach(sim)
+        return self
 
     # -- data management ------------------------------------------------------
     def put_dataset(self, name: str, columns: Dict[str, np.ndarray],
@@ -60,16 +69,45 @@ class ObjectStore:
     def object_names(self, dataset: str) -> List[str]:
         return sorted(k for k in self.objects if k.startswith(dataset + "/"))
 
+    def replicas(self, oname: str) -> List[int]:
+        """Storage-node indices holding a replica of ``oname`` (used by the
+        fleet's replica-aware router)."""
+        return list(self._placement[oname])
+
     # -- storage request (proxy <- storage node) ------------------------------
     def read(self, oname: str, t: float, node_choice: int = 0) -> Tuple[StoredObject, float]:
         """Returns (object, time_ready). Reads from the least-busy replica."""
         obj = self.objects[oname]
         replicas = self._placement[oname]
         node = min(
-            (self.nodes[r] for r in replicas), key=lambda nd: nd.busy_until
+            (self.nodes[r] for r in replicas), key=lambda nd: (nd.busy_until, nd.name)
         )
         _, ready = node.transfer(t, obj.nbytes)
+        if self.sim is not None:
+            self.sim.record(ready, "store.read", f"{oname}@{node.name}")
         return obj, ready
 
     def total_bytes(self, dataset: str) -> int:
         return sum(self.objects[o].nbytes for o in self.object_names(dataset))
+
+
+def synthetic_image_store(
+    dataset: str = "imagenet",
+    n_samples: int = 8000,
+    object_size: int = 1000,
+    img_bytes: int = 110_000,
+    n_classes: int = 1000,
+    seed: int = 0,
+) -> ObjectStore:
+    """The benchmark/example/test workload: an ImageNet-shaped dataset in
+    fixed-size objects, with on-wire object sizes forced to the paper's
+    ~110 KB/image (payload arrays stay tiny so CPU runs are fast)."""
+    store = ObjectStore()
+    rng = np.random.default_rng(seed)
+    store.put_dataset(dataset, {
+        "x": rng.normal(size=(n_samples, 8, 8, 3)).astype(np.float32),
+        "y": rng.integers(0, n_classes, size=(n_samples,)).astype(np.int32),
+    }, object_size=object_size)
+    for o in store.objects.values():
+        o.nbytes = o.n_samples * img_bytes
+    return store

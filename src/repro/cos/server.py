@@ -26,7 +26,7 @@ import numpy as np
 from repro.config import HW
 from repro.core.batch_adapt import AdaptRequest, AdaptResult, adapt_batches
 from repro.core.profiler import LayerProfile
-from repro.cos.clock import Accelerator, EventLog
+from repro.cos.clock import Accelerator, EventLog, Simulator
 from repro.cos.objectstore import ObjectStore
 
 
@@ -55,6 +55,7 @@ class PostResponse:
     arrival: float
     started: float
     finished: float
+    server_id: int = 0             # replica that served the request
 
     @property
     def queue_delay(self) -> float:
@@ -79,10 +80,15 @@ class HapiServer:
         b_min: int = 25,               # paper §5.5
         decoupled: bool = True,        # Table 3: proxy-embedded vs decoupled
         mxu_efficiency: float = 0.4,
+        server_id: int = 0,
+        sim: Optional[Simulator] = None,
     ) -> None:
         self.store = store
+        self.server_id = server_id
+        self.sim = sim
         self.accels = [
-            Accelerator(name=f"cos-accel{i}", flops=flops_per_accel, hbm=hbm_per_accel)
+            Accelerator(name=f"s{server_id}-accel{i}", flops=flops_per_accel,
+                        hbm=hbm_per_accel, sim=sim)
             for i in range(n_accelerators)
         ]
         self.wait_window = wait_window
@@ -139,54 +145,78 @@ class HapiServer:
         while self.queue and self.alive:
             guard += 1
             assert guard < 10_000, "scheduler livelock"
-            t = max(now, min(r.arrival for r in self.queue)) + self.wait_window
-            self._free_expired(t)
-            arrived = [r for r in self.queue if r.arrival <= t]
-            if not arrived:
-                now = min(r.arrival for r in self.queue)
-                continue
-
-            # Distribute evenly over accelerators (paper §5.5), adapt per accel.
-            per_accel: Dict[int, List[PostRequest]] = {}
-            for r in arrived:
-                idx = self._rr % len(self.accels)
-                self._rr += 1
-                per_accel.setdefault(idx, []).append(r)
-
-            progressed = False
-            for ai, reqs in per_accel.items():
-                accel = self.accels[ai]
-                budget = accel.hbm - accel.mem_used
-                adapt_reqs = [
-                    AdaptRequest(
-                        req_id=r.req_id,
-                        mem_per_sample=self._mem_per_sample(r),
-                        mem_model=r.profile.prefix_param_bytes[r.split],
-                        b_max=r.b_max,
-                        b_min_override=0 if r.adaptable else r.b_max,
-                    )
-                    for r in reqs
-                ]
-                res = adapt_batches(adapt_reqs, budget, b_min=self.b_min)
-                self.adapt_results.append(res)
-                by_id = {r.req_id: r for r in reqs}
-                for a in res.assignments:
-                    req = by_id[a.req_id]
-                    resp = self._execute(req, a.batch, a.mem, ai, t)
-                    responses.append(resp)
-                    self.queue.remove(req)
-                    progressed = True
-                # dropped requests stay queued for the next round
-
-            if not progressed:
-                # Nothing fit: wait for the earliest lease to expire.
-                if self.leases:
-                    now = min(l.end for l in self.leases)
-                else:  # pathological: shrink by dropping the newest request
-                    victim = max(arrived, key=lambda r: r.arrival)
-                    self.queue.remove(victim)
-                    self.log.add(t, "reject", victim.object_name)
+            served, now = self.drain_round(now)
+            responses.extend(served)
         return responses
+
+    def drain_round(self, now: float = 0.0) -> Tuple[List[PostResponse], float]:
+        """One coalescing-window + batch-adaptation scheduling round.
+
+        Returns ``(responses, next_now)``. The fleet steps replicas one
+        round at a time so control events (kills, restarts, autoscaling)
+        interleave with serving in deterministic event order; a bare
+        server just loops this inside :meth:`drain`.
+        """
+        if not self.queue or not self.alive:
+            return [], now
+        responses: List[PostResponse] = []
+        t = max(now, min(r.arrival for r in self.queue)) + self.wait_window
+        self._free_expired(t)
+        arrived = [r for r in self.queue if r.arrival <= t]
+        if not arrived:
+            return [], min(r.arrival for r in self.queue)
+
+        # Distribute evenly over accelerators (paper §5.5), adapt per accel.
+        per_accel: Dict[int, List[PostRequest]] = {}
+        for r in arrived:
+            idx = self._rr % len(self.accels)
+            self._rr += 1
+            per_accel.setdefault(idx, []).append(r)
+
+        progressed = False
+        planned = []            # (queue_position, req, batch, mem, accel)
+        pos = {r.req_id: i for i, r in enumerate(arrived)}
+        for ai, reqs in per_accel.items():
+            accel = self.accels[ai]
+            budget = accel.hbm - accel.mem_used
+            adapt_reqs = [
+                AdaptRequest(
+                    req_id=r.req_id,
+                    mem_per_sample=self._mem_per_sample(r),
+                    mem_model=r.profile.prefix_param_bytes[r.split],
+                    b_max=r.b_max,
+                    b_min_override=0 if r.adaptable else r.b_max,
+                )
+                for r in reqs
+            ]
+            res = adapt_batches(adapt_reqs, budget, b_min=self.b_min)
+            self.adapt_results.append(res)
+            by_id = {r.req_id: r for r in reqs}
+            for a in res.assignments:
+                req = by_id[a.req_id]
+                planned.append((pos[req.req_id], req, a.batch, a.mem, ai))
+            # dropped requests stay queued for the next round
+        # Execute in queue order (not accelerator-major): admitted requests
+        # hit the shared storage nodes in their arrival interleaving, so one
+        # accelerator's batch cannot monopolize the read path.
+        for _, req, batch, mem, ai in sorted(planned, key=lambda p: p[0]):
+            resp = self._execute(req, batch, mem, ai, t)
+            responses.append(resp)
+            self.queue.remove(req)
+            progressed = True
+
+        if not progressed:
+            # Nothing fit: wait for the earliest lease to expire.
+            if self.leases:
+                now = min(l.end for l in self.leases)
+            else:  # pathological: shrink by dropping the newest request
+                victim = max(arrived, key=lambda r: r.arrival)
+                self.queue.remove(victim)
+                self.log.add(t, "reject", victim.object_name)
+                if self.sim is not None:
+                    self.sim.record(t, "reject",
+                                    f"s{self.server_id} {victim.object_name}")
+        return responses, now
 
     def _mem_per_sample(self, req: PostRequest) -> float:
         """Forward working set; if training layers are pushed down
@@ -234,15 +264,24 @@ class HapiServer:
         if req.compress:
             act_bytes *= 0.53  # int8 + per-128 scales vs bf16
         self.log.add(end, "served", f"{req.object_name} b={cos_batch}")
+        if self.sim is not None:
+            self.sim.record(end, "served",
+                            f"s{self.server_id} t{req.tenant} "
+                            f"{req.object_name} b={cos_batch}")
         return PostResponse(
             req_id=req.req_id, tenant=req.tenant, object_name=req.object_name,
             acts=acts, act_bytes=act_bytes, cos_batch=cos_batch,
             arrival=req.arrival, started=start, finished=end,
+            server_id=self.server_id,
         )
 
     # -- metrics -----------------------------------------------------------------
     def gpu_memory_peak(self) -> float:
         return max((l.nbytes for l in self.leases), default=0.0)
+
+    def queue_depth(self) -> int:
+        """Routing/autoscaling signal: requests waiting on this replica."""
+        return len(self.queue)
 
 
 def _leaves(x):

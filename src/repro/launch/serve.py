@@ -1,10 +1,17 @@
-"""Serving driver: prefill a batch of prompts, decode tokens.
+"""Serving driver: prefill a batch of prompts, decode tokens — or stand
+up a COS fleet.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --tokens 16
+    PYTHONPATH=src python -m repro.launch.serve --cos-fleet 4 --tenants 3
 
 On CPU this runs the reduced config (--smoke default); on real hardware
 the same driver jits the full config over the production mesh with the
 flash-decode cache sharding of distributed/sharding.cache_pspecs.
+
+``--cos-fleet N`` instead launches N stateless Hapi server replicas on
+the shared discrete-event simulator (with queue-depth autoscaling up to
+``--max-servers``) and serves a multi-tenant feature-extraction
+workload, printing per-replica and per-tenant throughput.
 """
 from __future__ import annotations
 
@@ -72,14 +79,77 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
     return {"tokens": seqs, "tok_per_s": batch * new_tokens / dt}
 
 
+def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
+                    max_servers: int = 8, autoscale: bool = True):
+    """Drive a HapiFleet with a multi-tenant burst workload and report
+    served throughput per replica and per tenant."""
+    from repro.core.profiler import profile_layered
+    from repro.cos.fleet import AutoscalePolicy, HapiFleet
+    from repro.cos.objectstore import synthetic_image_store
+    from repro.cos.server import PostRequest
+    from repro.config import HapiConfig
+    from repro.core.splitter import choose_split
+    from repro.models.vision import PAPER_MODELS
+
+    store = synthetic_image_store("serve", seed=seed)
+
+    policy = AutoscalePolicy(min_servers=1, max_servers=max_servers) \
+        if autoscale else None
+    fleet = HapiFleet(store, n_servers=n_servers, seed=seed,
+                      autoscale=policy, n_accelerators=2,
+                      flops_per_accel=65e12)
+    hapi = HapiConfig()
+    names = list(PAPER_MODELS)
+    rid = 0
+    for t in range(n_tenants):
+        mname = names[t % len(names)]
+        prof = profile_layered(PAPER_MODELS[mname](1000))
+        split = choose_split(prof, hapi, 1000).split_index
+        for oname in store.object_names("serve"):
+            rid += 1
+            fleet.submit(PostRequest(
+                req_id=rid, tenant=t, model_key=mname, split=split,
+                object_name=oname, b_max=hapi.cos_batch, profile=prof,
+                arrival=float(fleet.sim.rng.uniform(0.0, 0.005)),
+            ))
+    responses = fleet.drain()
+    return {
+        "served": len(responses),
+        "makespan": fleet.makespan(),
+        "n_alive": fleet.n_alive,
+        "served_by_server": dict(sorted(fleet.served_by_server.items())),
+        "tenant_throughput": {t: s.throughput
+                              for t, s in sorted(fleet.tenant_stats.items())},
+        "scale_events": fleet.scale_events(),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--cos-fleet", type=int, default=0, metavar="N",
+                    help="serve a COS fleet of N replicas instead of decoding")
+    ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--max-servers", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.cos_fleet:
+        out = serve_cos_fleet(args.cos_fleet, n_tenants=args.tenants,
+                              seed=args.seed, max_servers=args.max_servers)
+        print(f"served {out['served']} POSTs in {out['makespan']:.3f}s "
+              f"({out['n_alive']} replicas alive)")
+        print(f"per-server: {out['served_by_server']}")
+        for t, thr in out["tenant_throughput"].items():
+            print(f"tenant {t}: {thr:10.1f} samples/s")
+        for ev in out["scale_events"]:
+            print(f"  scale event t={ev[0]:.3f} {ev[1]} {ev[2]}")
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --cos-fleet is given")
     out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                 new_tokens=args.tokens, smoke=not args.full)
     print(f"decoded {out['tokens'].shape} @ {out['tok_per_s']:.1f} tok/s")

@@ -1,0 +1,69 @@
+"""Minimal seeded random-search fallback for ``hypothesis``.
+
+The tier-1 suite's property tests use hypothesis when it is installed;
+this shim provides API-compatible ``given``/``settings`` and the handful
+of strategies the suite needs (``integers``, ``floats``, ``lists``,
+``builds``) so the same test bodies run — deterministically, from a
+fixed seed — on images without hypothesis. No shrinking, no example
+database: on failure the raising example's kwargs are in the traceback.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+N_EXAMPLES = 50
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(
+        lambda rnd: [elements.draw(rnd)
+                     for _ in range(rnd.randint(min_size, max_size))]
+    )
+
+
+def builds(target, **field_strategies):
+    return _Strategy(
+        lambda rnd: target(**{k: s.draw(rnd)
+                              for k, s in field_strategies.items()})
+    )
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rnd = random.Random(_SEED)
+            for _ in range(N_EXAMPLES):
+                drawn = {name: s.draw(rnd) for name, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+        # Hide the strategy parameters from pytest's fixture resolution
+        # (hypothesis does the same): the wrapper itself takes none.
+        del wrapper.__wrapped__
+        params = [p for name, p in
+                  inspect.signature(fn).parameters.items()
+                  if name not in strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+    return deco
+
+
+def settings(**_kw):
+    def deco(fn):
+        return fn
+    return deco

@@ -1,8 +1,21 @@
-"""Property tests for the Eq. 4 batch-adaptation solver (paper §5.5)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+"""Property tests for the Eq. 4 batch-adaptation solver (paper §5.5).
 
-from repro.core.batch_adapt import AdaptRequest, adapt_batches, adaptation_stats
+Runs with or without hypothesis: when it is not installed, the seeded
+random-search shim in tests/_propcheck.py drives the same properties.
+"""
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # pragma: no cover - env dependent
+    import _propcheck as st
+    from _propcheck import given, settings
+
+from repro.core.batch_adapt import (
+    AdaptRequest,
+    adapt_batches,
+    adaptation_stats,
+    per_server_adaptation_stats,
+)
 
 req_strategy = st.builds(
     AdaptRequest,
@@ -59,6 +72,53 @@ def test_identical_requests_near_even(n, mem_ps, budget):
     if res.assignments:
         bs = [a.batch for a in res.assignments]
         assert max(bs) - min(bs) <= 8  # one water-fill step
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    reqs=st.lists(req_strategy, min_size=0, max_size=10),
+    budget=st.floats(1e6, 64e9),
+    b_min=st.integers(1, 256),
+    n_fixed=st.integers(0, 10),
+)
+def test_invariants_with_non_adaptable(reqs, budget, b_min, n_fixed):
+    """ALL_IN_COS requests (b_min_override == b_max) must never shrink:
+    they are admitted at exactly b_max or dropped; adaptable requests obey
+    b_min <= b <= b_max; the budget bound holds regardless of the mix."""
+    reqs = [
+        AdaptRequest(i, r.mem_per_sample, r.mem_model, r.b_max,
+                     b_min_override=r.b_max if i < n_fixed else 0)
+        for i, r in enumerate(reqs)
+    ]
+    res = adapt_batches(reqs, budget, b_min=b_min)
+
+    assert res.mem_used <= budget + 1e-6
+    total = sum(a.mem for a in res.assignments)
+    assert total <= budget + 1e-6
+
+    by_id = {r.req_id: r for r in reqs}
+    for a in res.assignments:
+        r = by_id[a.req_id]
+        assert a.batch <= r.b_max
+        if r.b_min_override:            # non-adaptable: all-or-nothing
+            assert a.batch == r.b_max
+        else:
+            assert a.batch >= min(b_min, r.b_max)
+    assert len(res.assignments) + len(res.dropped) == len(reqs)
+
+
+def test_per_server_stats_fleet_view():
+    """Adaptation rounds run per server replica; the fleet helper keeps
+    them separable (each server against its own accelerator budgets)."""
+    tight = adapt_batches([AdaptRequest(i, 1e7, 1e8, 1000) for i in range(8)],
+                          budget=16e9, b_min=25)
+    roomy = adapt_batches([AdaptRequest(i, 1e6, 1e8, 64) for i in range(4)],
+                          budget=64e9, b_min=8)
+    stats = per_server_adaptation_stats({0: [tight], 1: [roomy]},
+                                        default_batch=1000)
+    assert set(stats) == {0, 1}
+    assert stats[0][0] > 0          # the tight server had to adapt
+    assert stats[1][0] == 100.0     # b_max 64 < 1000 counts as reduced
 
 
 def test_drop_order_is_lifo():

@@ -73,6 +73,7 @@ PIPE_PROG = textwrap.dedent("""
     import sys
     sys.path.insert(0, "src")
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.distributed.pipeline import pipeline_stages
 
     S, M, D = 4, 8, 16
@@ -83,7 +84,7 @@ PIPE_PROG = textwrap.dedent("""
 
     fn = lambda sp, v: jnp.tanh(v @ sp["w"])
     body = pipeline_stages(fn, S, M, axis="stage")
-    piped = jax.jit(jax.shard_map(
+    piped = jax.jit(shard_map(
         body, mesh=mesh, in_specs=({"w": P("stage")}, P("stage")),
         out_specs=P(), check_vma=False,
     ))({"w": w}, x)

@@ -1,7 +1,14 @@
-"""Properties of Algorithm 1 (paper §5.4) and the cost-optimal extension."""
-import hypothesis.strategies as st
+"""Properties of Algorithm 1 (paper §5.4) and the cost-optimal extension.
+
+Runs with or without hypothesis (falls back to tests/_propcheck.py)."""
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # pragma: no cover - env dependent
+    import _propcheck as st
+    from _propcheck import given, settings
 
 from repro.config import HapiConfig
 from repro.configs import get_config
