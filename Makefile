@@ -1,11 +1,15 @@
 # CI entry points. `make ci` is what a checkin must keep green.
 PY := PYTHONPATH=src python
 
-.PHONY: ci tier1 fleet collect fast bench-fleet
+.PHONY: ci check tier1 fleet collect fast bench-fleet fleet-smoke
 
-# collect + the fast fleet scenario tests first (fail fast on the
-# most-churned layer), then the full tier-1 run.
-ci: collect fleet tier1
+# collect + the fast check tier first (fail fast on the most-churned
+# layers), then the full tier-1 run.
+ci: collect check tier1
+
+# The fast gate: fast test tier + a 2-server fleet_scaling smoke with
+# the determinism check (no BENCH_fleet.json written).
+check: fast fleet-smoke
 
 # Fail fast on collection regressions (e.g. a hard import of an
 # uninstalled dependency aborting whole test modules).
@@ -16,15 +20,21 @@ collect:
 tier1:
 	$(PY) -m pytest -x -q
 
-# Fleet scenario tests only (determinism, kill/re-issue, fairness).
+# Fleet scenario tests only (determinism, kill/re-issue, fairness,
+# policy pluggability via the repro.api facade).
 fleet:
-	$(PY) -m pytest -x -q tests/test_fleet.py
+	$(PY) -m pytest -x -q tests/test_fleet.py tests/test_api_cluster.py
 
 # Tier-1 without the slow calibration/e2e tests.
 fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
+# 2-server scaling smoke used by `make check` (deterministic, quick).
+fleet-smoke:
+	$(PY) benchmarks/fleet_scaling.py --servers 1,2 --check-determinism --out ""
+
 # 1->8 server scaling sweep; exits non-zero unless throughput is
-# monotonic and the seeded event log reproduces.
+# monotonic and the seeded event log reproduces. Writes BENCH_fleet.json
+# (the cross-PR perf trajectory record).
 bench-fleet:
 	$(PY) benchmarks/fleet_scaling.py --check-determinism

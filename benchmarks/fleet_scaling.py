@@ -3,11 +3,12 @@ COS grows from 1 to 8 stateless server replicas.
 
     PYTHONPATH=src python benchmarks/fleet_scaling.py [--servers 1,2,4,8]
         [--tenants 3] [--seed 0] [--check-determinism]
+        [--routing replica-aware|least-loaded] [--out BENCH_fleet.json]
 
 A multi-tenant burst workload (every tenant POSTs its whole epoch at
-once, arrivals jittered by the seeded simulator RNG) is replayed on the
-shared discrete-event simulator for each fleet size. Reported per fleet
-size:
+once, arrivals jittered by the seeded simulator RNG) is replayed through
+the :class:`repro.api.HapiCluster` facade for each fleet size. Reported
+per fleet size:
 
 * **throughput** — served samples per virtual second (total samples /
   fleet makespan); must grow monotonically while the workload is
@@ -17,68 +18,56 @@ size:
   choice is optimal under the fleet's bandwidth, 0.5 = it takes 2x the
   optimal epoch time).
 
+Results are also written as machine-readable JSON (``--out``, default
+``BENCH_fleet.json``) so the perf trajectory is tracked across PRs.
 Same seed => byte-identical simulator event log (asserted by
 ``--check-determinism`` and tests/test_fleet.py).
 """
 from __future__ import annotations
 
 import argparse
+import json
 from typing import Dict, List
 
-
+from repro.api import HapiCluster, ROUTING_POLICIES
 from repro.config import HapiConfig
 from repro.core.batch_adapt import per_server_adaptation_stats
 from repro.core.cost_model import roofline_epoch_time
-from repro.core.profiler import profile_layered
 from repro.core.splitter import choose_split, choose_split_cost_optimal
-from repro.cos.clock import Simulator
-from repro.cos.fleet import HapiFleet
-from repro.cos.objectstore import synthetic_image_store
-from repro.cos.server import PostRequest
-from repro.models.vision import alexnet, resnet18, vgg11
 
-TENANT_MODELS = [("alexnet", alexnet), ("resnet18", resnet18), ("vgg11", vgg11)]
+TENANT_MODELS = ["alexnet", "resnet18", "vgg11"]
 
 
 def run_fleet(n_servers: int, n_tenants: int = 3, seed: int = 0,
-              train_batch: int = 1000) -> Dict:
+              train_batch: int = 1000, routing: str = "replica-aware") -> Dict:
     """One burst workload on an ``n_servers`` fleet; returns metrics +
     the full simulator event log (for determinism checks)."""
-    sim = Simulator(seed)
-    store = synthetic_image_store()   # content seed fixed; sim seed varies
-    fleet = HapiFleet(store, n_servers=n_servers, sim=sim,
-                      n_accelerators=2, flops_per_accel=65e12,
-                      hbm_per_accel=16e9)
+    cluster = (HapiCluster(seed=seed)
+               .with_servers(n_servers, n_accelerators=2,
+                             flops_per_accel=65e12, hbm_per_accel=16e9)
+               .with_dataset("imagenet")   # content seed fixed; sim seed varies
+               .with_routing(ROUTING_POLICIES[routing]()))
     hapi = HapiConfig(network_bandwidth=1e9 / 8)
-    objects = store.object_names("imagenet")
+    n_objects = len(cluster.store.object_names("imagenet"))
 
-    profiles, splits = {}, {}
-    rid = 0
+    splits = {}
     for t in range(n_tenants):
-        mname, build = TENANT_MODELS[t % len(TENANT_MODELS)]
-        prof = profiles.setdefault(mname, profile_layered(build(1000)))
+        mname = TENANT_MODELS[t % len(TENANT_MODELS)]
+        prof = cluster.profile(mname)
         split = choose_split(prof, hapi, train_batch).split_index
         splits[t] = (mname, split)
-        jitter = float(sim.rng.uniform(0.0, 0.005))
-        for oname in objects:
-            rid += 1
-            fleet.submit(PostRequest(
-                req_id=rid, tenant=t, model_key=mname, split=split,
-                object_name=oname, b_max=min(train_batch, hapi.cos_batch),
-                profile=prof, arrival=jitter,
-            ))
-    responses = fleet.drain()
+        cluster.submit_burst("imagenet", mname, tenant=t,
+                             train_batch=train_batch, hapi=hapi, split=split)
+    responses = cluster.drain()
 
-    total_samples = sum(store.objects[r.object_name].n_samples
-                       for r in responses)
-    makespan = max(r.finished for r in responses)
+    report = cluster.report()
     quality = {}
     for t, (mname, split) in splits.items():
-        prof = profiles[mname]
+        prof = cluster.profile(mname)
         opt = choose_split_cost_optimal(prof, hapi, train_batch,
                                         cos_flops=65e12, client_flops=65e12)
         epoch = lambda s: roofline_epoch_time(
-            prof, s, len(objects) * 1000, train_batch,
+            prof, s, n_objects * 1000, train_batch,
             bandwidth=hapi.network_bandwidth,
             cos_flops=65e12, client_flops=65e12).total
         quality[t] = epoch(opt.split_index) / max(epoch(split), 1e-12)
@@ -86,22 +75,22 @@ def run_fleet(n_servers: int, n_tenants: int = 3, seed: int = 0,
         "n_servers": n_servers,
         "n_tenants": n_tenants,
         "served": len(responses),
-        "throughput": total_samples / makespan,
-        "makespan": makespan,
-        "served_by_server": dict(sorted(fleet.served_by_server.items())),
-        "tenant_throughput": {t: s.throughput
-                              for t, s in sorted(fleet.tenant_stats.items())},
+        "throughput": report.throughput,
+        "makespan": report.makespan,
+        "served_by_server": report.served_by_server,
+        "tenant_throughput": report.tenant_throughput,
         "split_quality": quality,
         "adaptation": per_server_adaptation_stats(
-            fleet.adapt_results_by_server, hapi.cos_batch),
-        "event_log": fleet.sim.log.digest(),
+            cluster.fleet.adapt_results_by_server, hapi.cos_batch),
+        "event_log": cluster.event_digest(),
     }
 
 
-def sweep(servers: List[int], n_tenants: int, seed: int) -> List[Dict]:
+def sweep(servers: List[int], n_tenants: int, seed: int,
+          routing: str = "replica-aware") -> List[Dict]:
     rows = []
     for n in servers:
-        r = run_fleet(n, n_tenants=n_tenants, seed=seed)
+        r = run_fleet(n, n_tenants=n_tenants, seed=seed, routing=routing)
         rows.append(r)
         q = min(r["split_quality"].values())
         print(f"servers={n}  throughput={r['throughput']:10.1f} samples/s  "
@@ -111,26 +100,66 @@ def sweep(servers: List[int], n_tenants: int, seed: int) -> List[Dict]:
     return rows
 
 
+def write_json(path: str, rows: List[Dict], *, seed: int, routing: str,
+               monotonic: bool, determinism) -> None:
+    """BENCH_fleet.json: the cross-PR perf trajectory record."""
+    payload = {
+        "benchmark": "fleet_scaling",
+        "seed": seed,
+        "routing": routing,
+        "monotonic_throughput": monotonic,
+        "determinism": determinism,
+        "rows": [
+            {
+                "n_servers": r["n_servers"],
+                "n_tenants": r["n_tenants"],
+                "served": r["served"],
+                "throughput": r["throughput"],
+                "makespan": r["makespan"],
+                "served_by_server": {str(k): v
+                                     for k, v in r["served_by_server"].items()},
+                "split_quality": {str(k): v
+                                  for k, v in r["split_quality"].items()},
+                "min_split_quality": min(r["split_quality"].values()),
+            }
+            for r in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--servers", default="1,2,4,8")
     ap.add_argument("--tenants", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--routing", default="replica-aware",
+                    choices=sorted(ROUTING_POLICIES))
     ap.add_argument("--check-determinism", action="store_true")
+    ap.add_argument("--out", default="BENCH_fleet.json",
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args(argv)
     servers = [int(s) for s in args.servers.split(",")]
 
-    rows = sweep(servers, args.tenants, args.seed)
+    rows = sweep(servers, args.tenants, args.seed, args.routing)
 
     ths = [r["throughput"] for r in rows]
     mono = all(b >= a for a, b in zip(ths, ths[1:]))
     print(f"monotonic 1->{servers[-1]}: {mono}")
+    same = None
     if args.check_determinism:
-        again = run_fleet(servers[-1], n_tenants=args.tenants, seed=args.seed)
+        again = run_fleet(servers[-1], n_tenants=args.tenants, seed=args.seed,
+                          routing=args.routing)
         same = again["event_log"] == rows[-1]["event_log"]
         print(f"determinism (seed {args.seed}): {same}")
-        if not same:
-            return 1
+    if args.out:
+        write_json(args.out, rows, seed=args.seed, routing=args.routing,
+                   monotonic=mono, determinism=same)
+    if same is False:
+        return 1
     return 0 if mono else 1
 
 

@@ -13,14 +13,13 @@ from typing import List, Tuple
 
 import numpy as np
 
+from repro.api import HapiCluster, TenantSpec
 from repro.config import HapiConfig
 from repro.core.batch_adapt import adaptation_stats
 from repro.core.profiler import profile_layered
 from repro.core.splitter import choose_split
-from repro.cos.client import BaselineClient, HapiClient
+from repro.cos.client import BaselineClient
 from repro.cos.clock import Link
-from repro.cos.objectstore import ObjectStore
-from repro.cos.server import HapiServer
 from repro.models.vision import PAPER_MODELS, alexnet, resnet18, tiny_transformer_encoder, vgg11
 
 Row = Tuple[str, float, str]
@@ -32,42 +31,35 @@ IMG_BYTES = 110_000          # JPEG-decoded ImageNet sample on the wire
 GBPS = 1e9 / 8
 
 
-def _store(n=8000, obj=1000) -> ObjectStore:
-    store = ObjectStore()
-    rng = np.random.default_rng(0)
-    store.put_dataset("imagenet", {
-        "x": rng.normal(size=(n, 4, 4, 3)).astype(np.float32),
-        "y": rng.integers(0, 1000, size=(n,)).astype(np.int32),
-    }, object_size=obj)
-    for o in store.objects.values():
-        o.nbytes = o.n_samples * IMG_BYTES
-    return store
+def _cluster(n=8000, obj=1000, **server_kw) -> HapiCluster:
+    """Paper-testbed deployment: one stateless server replica with two
+    T4-class accelerators, stood up through the repro.api facade."""
+    server_kw.setdefault("flops_per_accel", T4_FLOPS)
+    server_kw.setdefault("hbm_per_accel", T4_HBM)
+    return (HapiCluster(seed=0)
+            .with_servers(1, n_accelerators=2, **server_kw)
+            .with_dataset("imagenet", n_samples=n, object_size=obj,
+                          img_bytes=IMG_BYTES)
+            .build())
 
 
 def _profiles():
     return {name: profile_layered(b(1000)) for name, b in PAPER_MODELS.items()}
 
 
-def _server(store, **kw) -> HapiServer:
-    kw.setdefault("flops_per_accel", T4_FLOPS)
-    kw.setdefault("hbm_per_accel", T4_HBM)
-    return HapiServer(store, n_accelerators=2, **kw)
-
-
 def _epoch(prof, key, *, bandwidth=GBPS, batch=2000, gpu=True, compress=False,
-           max_iter=4, push=False, store=None, server=None):
-    store = store or _store()
-    server = server or _server(store)
-    link = Link(name="wan", bandwidth=bandwidth)
+           max_iter=4, push=False, cluster=None):
+    cluster = cluster or _cluster()
     hapi = HapiConfig(network_bandwidth=bandwidth, compress_transfer=compress)
-    client = HapiClient(server, link, prof, hapi, key, has_accelerator=gpu,
-                        client_flops=T4_FLOPS, client_hbm=2 * T4_HBM,
-                        push_training=push)
-    return client.run_epoch("imagenet", train_batch=batch, max_iterations=max_iter)
+    tenant = cluster.tenant(TenantSpec(
+        model=key, profile=prof, hapi=hapi, has_accelerator=gpu,
+        client_flops=T4_FLOPS, client_hbm=2 * T4_HBM, push_training=push))
+    return tenant.run_epoch("imagenet", train_batch=batch,
+                            max_iterations=max_iter)
 
 
 def _baseline(prof, *, bandwidth=GBPS, batch=2000, gpu=True, max_iter=4, hbm=2 * T4_HBM):
-    store = _store()
+    store = _cluster().store
     link = Link(name="wan", bandwidth=bandwidth)
     base = BaselineClient(store, link, prof, client_flops=T4_FLOPS,
                           client_hbm=hbm, has_accelerator=gpu)
@@ -176,15 +168,14 @@ def fig12_multitenant() -> List[Row]:
     for n_tenants in (2, 6, 10):
         for push in (False, True):
             t0 = time.time()
-            store = _store(n=2000)
-            server = _server(store)
+            cluster = _cluster(n=2000)
             jcts = []
             for t in range(n_tenants):
-                link = Link(name=f"w{t}", bandwidth=12 * GBPS)
-                c = HapiClient(server, link, prof, HapiConfig(), "vit",
-                               tenant=t, client_flops=T4_FLOPS,
-                               push_training=push)
-                r = c.run_epoch("imagenet", train_batch=1000, max_iterations=1)
+                tenant = cluster.tenant(TenantSpec(
+                    model="vit", profile=prof, bandwidth=12 * GBPS,
+                    client_flops=T4_FLOPS, push_training=push))
+                r = tenant.run_epoch("imagenet", train_batch=1000,
+                                     max_iterations=1)
                 jcts.append(r.execution_time)
             label = "all_in_cos" if push else "hapi"
             rows.append((f"fig12.{label}.t{n_tenants}", (time.time() - t0) * 1e6,
@@ -214,26 +205,24 @@ def fig14_batch_adaptation() -> List[Row]:
     for batch in (1000, 4000, 6000, 8000):
         t0 = time.time()
         # BA ON
-        store = _store()
-        server = _server(store)
         hapi = HapiConfig(cos_batch=1000)
-        link = Link(name="w", bandwidth=GBPS)
-        c = HapiClient(server, link, prof, hapi, "vgg11", client_flops=T4_FLOPS)
-        r_on = c.run_epoch("imagenet", train_batch=batch, max_iterations=1)
-        pct, red = adaptation_stats(server.adapt_results, hapi.cos_batch)
+        on = _cluster()
+        tenant = on.tenant(TenantSpec(model="vgg11", profile=prof, hapi=hapi,
+                                      client_flops=T4_FLOPS))
+        r_on = tenant.run_epoch("imagenet", train_batch=batch,
+                                max_iterations=1)
+        pct, red = adaptation_stats(on.fleet.adapt_results, hapi.cos_batch)
         # BA OFF: non-adaptable requests pinned at the fixed COS batch —
         # they either run as-is or OOM (paper Fig. 14 'X').
-        from repro.cos.server import PostRequest
-
-        store2 = _store()
-        server2 = _server(store2)
+        off = _cluster()
         split = choose_split(prof, hapi, batch).split_index
-        objs = store2.object_names("imagenet")[: max(1, batch // 1000)]
-        for i, o in enumerate(objs):
-            server2.submit(PostRequest(i, 0, "vgg11", split, o, 1000,
-                                       prof, 0.0, adaptable=False))
-        resp = server2.drain()
-        if len(resp) == len(objs):
+        n_objs = max(1, batch // 1000)
+        ids = off.submit_burst("imagenet", "vgg11", tenant=0,
+                               train_batch=batch, hapi=hapi, split=split,
+                               b_max=1000, adaptable=False, limit=n_objs,
+                               jitter=0.0)
+        resp = off.drain()
+        if len(resp) == len(ids):
             r_off = max(x.finished for x in resp)
             off_s = f"{r_off:.2f}"
         else:
@@ -268,13 +257,11 @@ def table3_server_modes() -> List[Row]:
         t0 = time.time()
         out = {}
         for mode in (True, False):
-            store = _store(n=4000)
-            server = _server(store, decoupled=mode)
-            link = Link(name="w", bandwidth=GBPS)
-            c = HapiClient(server, link, prof, HapiConfig(), name,
-                           client_flops=T4_FLOPS)
-            out[mode] = c.run_epoch("imagenet", train_batch=4000,
-                                    max_iterations=1).execution_time
+            cluster = _cluster(n=4000, decoupled=mode)
+            tenant = cluster.tenant(TenantSpec(model=name, profile=prof,
+                                               client_flops=T4_FLOPS))
+            out[mode] = tenant.run_epoch("imagenet", train_batch=4000,
+                                         max_iterations=1).execution_time
         rows.append((f"table3.{name}", (time.time() - t0) * 1e6,
                      f"decoupled_s={out[True]:.2f};in_proxy_s={out[False]:.2f}"))
     return rows

@@ -2,25 +2,24 @@
 (paper §7.5/§7.7 scaled out).
 
     PYTHONPATH=src python examples/multi_tenant_serving.py [--servers 3]
+        [--routing replica-aware|least-loaded]
+        [--placement round-robin|demand-aware]
 
-Ten tenants fine-tune different models against one storage tier. Their
-feature-extraction POSTs are routed by a :class:`HapiFleet` across
-stateless server replicas (replica-aware + least-loaded), each replica
-running the paper's Eq. 4 batch adaptation over its own accelerators.
-Everything shares one seeded discrete-event simulator, so the printout
-is bit-reproducible run to run.
+Ten tenants fine-tune different models against one storage tier. The
+whole deployment — shared discrete-event simulator, object store,
+stateless server replicas, per-tenant clients — is stood up through the
+:class:`repro.api.HapiCluster` facade; fleet behaviors (routing,
+placement) are pluggable policies selected on the command line. Each
+replica runs the paper's Eq. 4 batch adaptation over its own
+accelerators. Same seed => bit-reproducible printout run to run.
 """
 import argparse
 
 import numpy as np
 
-from repro.config import HapiConfig
+from repro.api import (HapiCluster, PLACEMENT_POLICIES, ROUTING_POLICIES,
+                       TenantSpec)
 from repro.core.batch_adapt import adaptation_stats, per_server_adaptation_stats
-from repro.core.profiler import profile_layered
-from repro.cos.client import HapiClient
-from repro.cos.clock import Link
-from repro.cos.fleet import HapiFleet
-from repro.cos.objectstore import synthetic_image_store
 from repro.models.vision import PAPER_MODELS
 
 
@@ -29,22 +28,26 @@ def main(argv=None):
     ap.add_argument("--servers", type=int, default=3)
     ap.add_argument("--tenants", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--routing", default="replica-aware",
+                    choices=sorted(ROUTING_POLICIES))
+    ap.add_argument("--placement", default="round-robin",
+                    choices=sorted(PLACEMENT_POLICIES))
     args = ap.parse_args(argv)
 
-    store = synthetic_image_store("imagenet", n_samples=4000)
-
-    fleet = HapiFleet(store, n_servers=args.servers, seed=args.seed,
-                      n_accelerators=2, flops_per_accel=65e12)
-    profiles = {n: profile_layered(b(1000)) for n, b in PAPER_MODELS.items()}
+    cluster = (HapiCluster(seed=args.seed)
+               .with_servers(args.servers, n_accelerators=2,
+                             flops_per_accel=65e12)
+               .with_dataset("imagenet", n_samples=4000)
+               .with_routing(ROUTING_POLICIES[args.routing]())
+               .with_placement(PLACEMENT_POLICIES[args.placement]()))
 
     names = list(PAPER_MODELS)
     jcts = []
     for t in range(args.tenants):
         model_key = names[t % len(names)]          # round-robin (paper §7.5)
-        link = Link(name=f"wan{t}", bandwidth=1e9 / 8)
-        client = HapiClient(fleet, link, profiles[model_key], HapiConfig(),
-                            model_key, tenant=t, client_flops=65e12)
-        res = client.run_epoch("imagenet", train_batch=1000, max_iterations=1)
+        tenant = cluster.tenant(TenantSpec(
+            model=model_key, bandwidth=1e9 / 8, client_flops=65e12))
+        res = tenant.run_epoch("imagenet", train_batch=1000, max_iterations=1)
         jcts.append(res.execution_time)
         served = res.served_by_server
         print(f"tenant {t:2d} ({model_key:12s}) split={res.split:2d} "
@@ -52,10 +55,11 @@ def main(argv=None):
               f"wire={res.total_wire_bytes/1e6:7.1f} MB "
               f"servers={dict(sorted(served.items()))}")
 
+    fleet = cluster.fleet
     pct, red = adaptation_stats(fleet.adapt_results, 1000)
     print(f"\nmakespan {max(jcts):.2f}s | mean JCT {np.mean(jcts):.2f}s | "
           f"batch-adapted {pct:.0f}% of requests (avg -{red:.0f}%)")
-    print(f"POSTs per replica: {dict(sorted(fleet.served_by_server.items()))}")
+    print(f"POSTs per replica: {cluster.report().served_by_server}")
     for sid, (p, r) in per_server_adaptation_stats(
             fleet.adapt_results_by_server, 1000).items():
         print(f"  server {sid}: adapted {p:.0f}% (avg -{r:.0f}%)")

@@ -3,7 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Walks the whole Hapi flow on a reduced model: profile -> Algorithm 1 split
--> Eq. 4 COS batch -> extract/tune execution -> one AdamW step.
+-> Eq. 4 COS batch -> extract/tune execution -> one AdamW step — then
+stands the same idea up as a *deployment* with the
+:class:`repro.api.HapiCluster` facade (simulator + object store + server
+fleet + tenant client in four lines).
 """
 import jax
 import jax.numpy as jnp
@@ -59,6 +62,21 @@ def main():
     state, metrics = step(state, batch)
     print(f"train step: loss {float(metrics['loss']):.4f} "
           f"gnorm {float(metrics['grad_norm']):.3f}")
+
+    # 6. The same flow as a served deployment: the HapiCluster facade
+    #    owns the simulator, object store, server fleet and tenant client.
+    from repro.api import HapiCluster, TenantSpec
+
+    cluster = (HapiCluster(seed=0)
+               .with_servers(2, n_accelerators=2, flops_per_accel=65e12)
+               .with_dataset("imagenet", n_samples=2000))
+    tenant = cluster.tenant(TenantSpec(model="alexnet", bandwidth=1e9 / 8,
+                                       client_flops=65e12))
+    res = tenant.run_epoch("imagenet", train_batch=1000, max_iterations=2)
+    rep = cluster.report()
+    print(f"cluster: split={res.split} epoch={res.execution_time:.2f}s "
+          f"served={rep.served} POSTs over {rep.n_alive} replicas "
+          f"({rep.throughput:.0f} samples/s)")
 
 
 if __name__ == "__main__":

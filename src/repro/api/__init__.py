@@ -1,0 +1,52 @@
+"""`repro.api` — *the* way to stand up and drive a HAPI deployment.
+
+One facade, :class:`HapiCluster`, owns the shared discrete-event
+simulator, the object store, the server fleet and the per-tenant
+clients; :mod:`repro.api.policies` holds the swappable routing /
+placement / scaling strategies behind it::
+
+    from repro.api import HapiCluster, TenantSpec
+
+    cluster = (HapiCluster(seed=0)
+               .with_servers(4, flops_per_accel=65e12)
+               .with_dataset("imagenet", n_samples=8000))
+    result = cluster.tenant(TenantSpec(model="alexnet")).run_epoch(
+        "imagenet", train_batch=1000)
+    print(cluster.report())
+
+Nothing outside this package should assemble ``Simulator`` +
+``ObjectStore`` + ``HapiFleet`` wiring by hand.
+"""
+from repro.api.policies import (
+    DemandAwarePlacement,
+    LeastLoadedRouting,
+    PLACEMENT_POLICIES,
+    PlacementPolicy,
+    QueueDepthScaling,
+    ROUTING_POLICIES,
+    ReplicaAwareRouting,
+    RoundRobinPlacement,
+    RoutingPolicy,
+    SCALING_POLICIES,
+    ScalingPolicy,
+    SloScaling,
+)
+
+_CLUSTER_EXPORTS = ("HapiCluster", "TenantSpec", "TenantHandle", "ClusterReport")
+
+__all__ = list(_CLUSTER_EXPORTS) + [
+    "RoutingPolicy", "ReplicaAwareRouting", "LeastLoadedRouting",
+    "PlacementPolicy", "RoundRobinPlacement", "DemandAwarePlacement",
+    "ScalingPolicy", "QueueDepthScaling", "SloScaling",
+    "ROUTING_POLICIES", "PLACEMENT_POLICIES", "SCALING_POLICIES",
+]
+
+
+def __getattr__(name):
+    # Lazy so `repro.cos.fleet` can import `repro.api.policies` without
+    # pulling in the cluster module (which imports the fleet back).
+    if name in _CLUSTER_EXPORTS:
+        from repro.api import cluster
+
+        return getattr(cluster, name)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

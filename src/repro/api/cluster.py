@@ -1,0 +1,417 @@
+"""The :class:`HapiCluster` facade — one object that owns a whole HAPI
+deployment: the shared discrete-event :class:`~repro.cos.clock.Simulator`,
+the :class:`~repro.cos.objectstore.ObjectStore`, the
+:class:`~repro.cos.fleet.HapiFleet` of stateless server replicas, and the
+per-tenant :class:`~repro.cos.client.HapiClient` front-ends.
+
+Before this facade existed every example and benchmark hand-wired those
+five layers; now the builder is the single assembly point::
+
+    cluster = (HapiCluster(seed=0)
+               .with_servers(4, n_accelerators=2, flops_per_accel=65e12)
+               .with_dataset("imagenet", n_samples=8000)
+               .with_scaling(SloScaling(max_servers=8)))
+    res = cluster.tenant(TenantSpec(model="alexnet")).run_epoch(
+        "imagenet", train_batch=1000)
+
+Builder calls (``with_*``) configure lazily; the deployment materializes
+on first use (or an explicit :meth:`build`). Topology choices — servers,
+storage, policies — are frozen at build time; datasets, executors and
+tenants can keep being added to a live cluster.
+
+Determinism: everything observable derives from ``seed`` — the same seed
+reproduces a byte-identical event log under any policy combination
+(asserted by tests/test_api_cluster.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.api.policies import (
+    PlacementPolicy,
+    RoutingPolicy,
+    ScalingPolicy,
+)
+from repro.config import HapiConfig
+from repro.core.profiler import LayerProfile, profile_layered
+from repro.core.splitter import SplitDecision, choose_split
+from repro.cos.client import EpochResult, HapiClient
+from repro.cos.clock import Link, Simulator
+from repro.cos.fleet import AutoscalePolicy, HapiFleet, TenantStats
+from repro.cos.objectstore import ObjectStore, put_synthetic_dataset
+from repro.cos.server import PostRequest, PostResponse
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """Everything the cluster needs to stand up one tenant's client.
+
+    ``model`` names one of the paper's vision models
+    (:data:`repro.models.vision.PAPER_MODELS`) — its profile is built and
+    cached by the cluster — or anything else if an explicit ``profile``
+    is supplied."""
+    model: str
+    profile: Optional[LayerProfile] = None
+    hapi: HapiConfig = field(default_factory=HapiConfig)
+    tenant: Optional[int] = None          # auto-assigned when None
+    # WAN link bytes/s; None uses hapi.network_bandwidth. Kept separate
+    # from `hapi` so the split choice can model one bandwidth while the
+    # wire runs another (paper Fig. 12's fast-testbed runs do exactly
+    # that).
+    bandwidth: Optional[float] = None
+    client_flops: float = 65e12
+    client_hbm: Optional[float] = None    # None -> HapiClient's default
+    has_accelerator: bool = True
+    straggler_factor: float = 3.0
+    train_fn: Optional[Callable] = None
+    push_training: bool = False           # ALL_IN_COS comparison mode
+    n_classes: int = 1000                 # head size when profiling `model`
+
+
+@dataclass
+class TenantHandle:
+    """A tenant admitted to the cluster; thin wrapper over its client."""
+    spec: TenantSpec
+    client: HapiClient
+
+    @property
+    def tenant_id(self) -> int:
+        return self.client.tenant
+
+    def choose_split(self, train_batch: int) -> SplitDecision:
+        return self.client.choose_split_for(train_batch)
+
+    def run_epoch(self, dataset: str, train_batch: int, *, t0: float = 0.0,
+                  max_iterations: Optional[int] = None) -> EpochResult:
+        return self.client.run_epoch(dataset, train_batch, t0=t0,
+                                     max_iterations=max_iterations)
+
+    def stats(self) -> Optional[TenantStats]:
+        fleet = self.client.server
+        return fleet.tenant_stats.get(self.tenant_id) \
+            if isinstance(fleet, HapiFleet) else None
+
+
+@dataclass
+class ClusterReport:
+    """Fleet-wide metrics snapshot (all times are virtual seconds)."""
+    served: int
+    makespan: float
+    throughput: float                     # served samples / makespan
+    n_alive: int
+    n_servers: int
+    reissued: int
+    rejected: int
+    served_by_server: Dict[int, int]
+    tenant_throughput: Dict[int, float]
+    scale_events: List[Tuple[float, str, str]]
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "served": self.served,
+            "makespan": self.makespan,
+            "throughput": self.throughput,
+            "n_alive": self.n_alive,
+            "n_servers": self.n_servers,
+            "reissued": self.reissued,
+            "rejected": self.rejected,
+            "served_by_server": dict(self.served_by_server),
+            "tenant_throughput": dict(self.tenant_throughput),
+            "scale_events": [list(e) for e in self.scale_events],
+        }
+
+
+@dataclass
+class _DatasetSpec:
+    name: str
+    columns: Optional[Dict[str, np.ndarray]]
+    n_samples: int
+    object_size: int
+    img_bytes: Optional[int]
+    n_classes: int
+    content_seed: int
+
+
+class HapiCluster:
+    """Builder + facade for a full HAPI deployment (see module docstring)."""
+
+    def __init__(self, seed: int = 0) -> None:
+        self.seed = seed
+        self._n_servers = 2
+        self._server_kwargs: Dict[str, Any] = {}
+        self._storage_kwargs: Dict[str, Any] = {}
+        self._fair_queueing = True
+        self._routing: Optional[RoutingPolicy] = None
+        self._placement: Optional[PlacementPolicy] = None
+        self._scaling: Optional[ScalingPolicy] = None
+        self._autoscale: Optional[AutoscalePolicy] = None
+        self._datasets: List[_DatasetSpec] = []
+        self._executors: Dict[str, Callable] = {}
+        self._profiles: Dict[Tuple[str, int], LayerProfile] = {}
+        self._next_tenant = 0
+        # Burst request ids live far above any client-issued id (clients
+        # number from tenant * 1_000_000, + 500_000 for re-issues), so the
+        # two facade entry points can share one fleet without collisions.
+        self._next_req = 1_000_000_000
+        self._tenants: Dict[int, TenantHandle] = {}
+        self._fleet: Optional[HapiFleet] = None
+
+    # -- builder ---------------------------------------------------------------
+    def _check_mutable(self, what: str) -> None:
+        if self._fleet is not None:
+            raise RuntimeError(
+                f"{what} must be configured before the cluster is built")
+
+    def with_servers(self, n: int, **server_kwargs) -> "HapiCluster":
+        """Fleet size + per-replica knobs (``n_accelerators``,
+        ``flops_per_accel``, ``hbm_per_accel``, ...)."""
+        self._check_mutable("with_servers")
+        self._n_servers = n
+        self._server_kwargs.update(server_kwargs)
+        return self
+
+    def with_storage(self, n_nodes: int = 3, replication: int = 3,
+                     internal_bandwidth: float = 5e9) -> "HapiCluster":
+        self._check_mutable("with_storage")
+        self._storage_kwargs = dict(
+            n_storage_nodes=n_nodes, replication=replication,
+            internal_bandwidth=internal_bandwidth)
+        return self
+
+    def with_fair_queueing(self, enabled: bool) -> "HapiCluster":
+        self._check_mutable("with_fair_queueing")
+        self._fair_queueing = enabled
+        return self
+
+    def with_routing(self, policy: RoutingPolicy) -> "HapiCluster":
+        self._check_mutable("with_routing")
+        self._routing = policy
+        return self
+
+    def with_placement(self, policy: PlacementPolicy) -> "HapiCluster":
+        self._check_mutable("with_placement")
+        self._placement = policy
+        return self
+
+    def with_scaling(self, policy: ScalingPolicy) -> "HapiCluster":
+        self._check_mutable("with_scaling")
+        self._scaling = policy
+        return self
+
+    def with_policies(self, *, routing: Optional[RoutingPolicy] = None,
+                      placement: Optional[PlacementPolicy] = None,
+                      scaling: Optional[ScalingPolicy] = None) -> "HapiCluster":
+        if routing is not None:
+            self.with_routing(routing)
+        if placement is not None:
+            self.with_placement(placement)
+        if scaling is not None:
+            self.with_scaling(scaling)
+        return self
+
+    def with_autoscale(self, policy: Optional[AutoscalePolicy] = None,
+                       **kwargs) -> "HapiCluster":
+        """Queue-depth autoscaling via the back-compat parameter block
+        (use :meth:`with_scaling` for any other strategy)."""
+        self._check_mutable("with_autoscale")
+        self._autoscale = policy if policy is not None else AutoscalePolicy(**kwargs)
+        return self
+
+    def with_dataset(self, name: str,
+                     columns: Optional[Dict[str, np.ndarray]] = None, *,
+                     n_samples: int = 8000, object_size: int = 1000,
+                     img_bytes: Optional[int] = 110_000,
+                     n_classes: int = 1000,
+                     content_seed: int = 0) -> "HapiCluster":
+        """Register a dataset. With ``columns`` the given arrays are stored
+        (live mode reads the real payload); without, a synthetic
+        ImageNet-shaped workload is generated — tiny arrays whose on-wire
+        size is forced to ``img_bytes`` per sample, the paper's ~110 KB
+        (pass ``img_bytes=None`` to keep true payload sizes)."""
+        spec = _DatasetSpec(name, columns, n_samples, object_size,
+                            img_bytes, n_classes, content_seed)
+        if self._fleet is not None:
+            self._put(spec)
+        else:
+            self._datasets.append(spec)
+        return self
+
+    def with_executor(self, model_key: str, fn: Callable) -> "HapiCluster":
+        """Register a live JAX forward ``fn(payload, split, cos_batch)``
+        fleet-wide (current and future replicas)."""
+        self._executors[model_key] = fn
+        if self._fleet is not None:
+            self._fleet.register_executor(model_key, fn)
+        return self
+
+    # -- lifecycle -------------------------------------------------------------
+    def build(self) -> "HapiCluster":
+        """Materialize the deployment; idempotent."""
+        if self._fleet is not None:
+            return self
+        sim = Simulator(self.seed)
+        store = ObjectStore(placement=self._placement, **self._storage_kwargs)
+        self._fleet = HapiFleet(
+            store, n_servers=self._n_servers, sim=sim,
+            fair_queueing=self._fair_queueing,
+            autoscale=self._autoscale,
+            routing=self._routing, placement=self._placement,
+            scaling=self._scaling,
+            **self._server_kwargs,
+        )
+        for spec in self._datasets:
+            self._put(spec)
+        for key, fn in self._executors.items():
+            self._fleet.register_executor(key, fn)
+        return self
+
+    def _put(self, spec: _DatasetSpec) -> None:
+        store = self.store
+        if spec.columns is not None:
+            store.put_dataset(spec.name, spec.columns,
+                              object_size=spec.object_size)
+            return
+        put_synthetic_dataset(store, spec.name, n_samples=spec.n_samples,
+                              object_size=spec.object_size,
+                              img_bytes=spec.img_bytes,
+                              n_classes=spec.n_classes,
+                              seed=spec.content_seed)
+
+    @property
+    def fleet(self) -> HapiFleet:
+        self.build()
+        return self._fleet
+
+    @property
+    def sim(self) -> Simulator:
+        return self.fleet.sim
+
+    @property
+    def store(self) -> ObjectStore:
+        return self.fleet.store
+
+    # -- model registry --------------------------------------------------------
+    def profile(self, model_key: str, n_classes: int = 1000) -> LayerProfile:
+        """Cached per-layer profile of one of the paper's vision models."""
+        key = (model_key, n_classes)
+        if key not in self._profiles:
+            from repro.models.vision import PAPER_MODELS
+
+            self._profiles[key] = profile_layered(
+                PAPER_MODELS[model_key](n_classes))
+        return self._profiles[key]
+
+    def split_for(self, model_key: str, train_batch: int,
+                  hapi: Optional[HapiConfig] = None,
+                  n_classes: int = 1000) -> SplitDecision:
+        return choose_split(self.profile(model_key, n_classes),
+                            hapi or HapiConfig(), train_batch)
+
+    # -- tenants ---------------------------------------------------------------
+    def tenant(self, spec: TenantSpec) -> TenantHandle:
+        """Admit a tenant: build its profile, split choice and client."""
+        self.build()
+        tid = spec.tenant
+        if tid is None:
+            tid = self._next_tenant
+        self._next_tenant = max(self._next_tenant, tid) + 1
+        prof = spec.profile or self.profile(spec.model, spec.n_classes)
+        link = Link(name=f"wan{tid}", bandwidth=spec.bandwidth) \
+            if spec.bandwidth is not None else None
+        extra = {}
+        if spec.client_hbm is not None:
+            extra["client_hbm"] = spec.client_hbm
+        client = HapiClient(
+            self._fleet, link, prof, spec.hapi, spec.model, tenant=tid,
+            client_flops=spec.client_flops,
+            has_accelerator=spec.has_accelerator,
+            straggler_factor=spec.straggler_factor,
+            train_fn=spec.train_fn, push_training=spec.push_training,
+            **extra,
+        )
+        handle = TenantHandle(spec=spec, client=client)
+        self._tenants[tid] = handle
+        return handle
+
+    @property
+    def tenants(self) -> Dict[int, TenantHandle]:
+        return dict(self._tenants)
+
+    # -- benchmark-style raw workloads ----------------------------------------
+    def submit_burst(self, dataset: str, model_key: str, *, tenant: int,
+                     train_batch: int = 1000,
+                     hapi: Optional[HapiConfig] = None,
+                     split: Optional[int] = None,
+                     jitter: float = 0.005,
+                     b_max: Optional[int] = None,
+                     adaptable: bool = True,
+                     limit: Optional[int] = None,
+                     n_classes: int = 1000) -> List[int]:
+        """Submit one POST per object of ``dataset`` (first ``limit`` of
+        them if given) for ``tenant`` — the burst workload of the serving
+        driver and the scaling benchmark. Arrival is a single seeded-RNG
+        jitter per burst; the split is Alg. 1's unless given; ``b_max`` /
+        ``adaptable=False`` pin the COS batch (the paper's BA-off
+        comparison). Returns the request ids."""
+        self.build()
+        hapi = hapi or HapiConfig()
+        prof = self.profile(model_key, n_classes)
+        if split is None:
+            split = choose_split(prof, hapi, train_batch).split_index
+        if b_max is None:
+            b_max = min(train_batch, hapi.cos_batch)
+        arrival = float(self.sim.rng.uniform(0.0, jitter)) if jitter else 0.0
+        ids = []
+        for oname in self.store.object_names(dataset)[:limit]:
+            self._next_req += 1
+            req = PostRequest(
+                req_id=self._next_req, tenant=tenant, model_key=model_key,
+                split=split, object_name=oname, b_max=b_max, profile=prof,
+                arrival=arrival, compress=hapi.compress_transfer,
+                adaptable=adaptable,
+            )
+            self._fleet.submit(req)
+            ids.append(req.req_id)
+        return ids
+
+    def drain(self, now: float = 0.0) -> List[PostResponse]:
+        """Serve everything pending/in-flight across the fleet."""
+        return self.fleet.drain(now=now)
+
+    # -- fleet control ---------------------------------------------------------
+    def kill(self, server_id: int) -> None:
+        self.fleet.kill(server_id)
+
+    def restart(self, server_id: int) -> None:
+        self.fleet.restart(server_id)
+
+    @property
+    def n_alive(self) -> int:
+        return self.fleet.n_alive
+
+    # -- metrics ---------------------------------------------------------------
+    def report(self) -> ClusterReport:
+        fleet = self.fleet
+        served = fleet.served_total()
+        samples = sum(ts.samples for ts in fleet.tenant_stats.values())
+        makespan = fleet.makespan()
+        return ClusterReport(
+            served=served,
+            makespan=makespan,
+            throughput=samples / makespan if makespan > 0 else 0.0,
+            n_alive=fleet.n_alive,
+            n_servers=len(fleet.servers),
+            reissued=fleet.reissued,
+            rejected=len(fleet.rejected),
+            served_by_server=dict(sorted(fleet.served_by_server.items())),
+            tenant_throughput={t: s.throughput
+                               for t, s in sorted(fleet.tenant_stats.items())},
+            scale_events=fleet.scale_events(),
+        )
+
+    def event_digest(self) -> Tuple[Tuple[float, str, str], ...]:
+        """Hashable event-log snapshot for determinism checks."""
+        return self.fleet.sim.log.digest()

@@ -1,0 +1,300 @@
+"""Pluggable fleet policies: routing, placement, scaling.
+
+The fleet's control decisions used to be hard-coded inside
+:mod:`repro.cos.fleet`. They are now three small strategy protocols —
+the shape the disaggregation literature converges on (tf.data service's
+disaggregated input processing, bring-your-own-model storage placement):
+one service facade, swappable policy modules behind it.
+
+* :class:`RoutingPolicy` — which alive replica serves a POST.
+* :class:`PlacementPolicy` — which storage nodes hold an object's
+  replicas, both at ``put_dataset`` time and (for demand-aware policies)
+  as re-replication while the fleet runs.
+* :class:`ScalingPolicy` — when the fleet grows or shrinks.
+
+Every policy must be **deterministic**: decisions may depend only on
+fleet/store state reachable from the arguments (queue depths, demand
+counters, the event log), never on wall-clock time or unseeded
+randomness. The cross-policy determinism test asserts that the same seed
+reproduces a byte-identical event log under any policy combination.
+
+Policies hold their own mutable state (demand counters, cooldowns) and
+are therefore owned by exactly one fleet; reusing an instance across
+fleets leaks state between runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Protocol, Tuple, TYPE_CHECKING, runtime_checkable
+
+if TYPE_CHECKING:  # avoid import cycle: fleet imports this module
+    from repro.cos.fleet import HapiFleet
+    from repro.cos.objectstore import ObjectStore
+    from repro.cos.server import HapiServer, PostRequest, PostResponse
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class RoutingPolicy(Protocol):
+    """Chooses the replica that serves a POST request."""
+
+    name: str
+
+    def route(self, fleet: "HapiFleet", req: "PostRequest",
+              alive: List["HapiServer"]) -> "HapiServer":
+        """Pick one of ``alive`` (non-empty). Must be deterministic."""
+        ...
+
+
+@dataclass
+class ReplicaAwareRouting:
+    """The fleet's historical default: prefer replicas co-located with a
+    storage node holding the object (server *i* sits next to storage node
+    ``i % n_nodes``, Swift-style); among candidates pick the least-loaded,
+    spreading each tenant across replicas under fair queueing."""
+
+    name: str = "replica-aware"
+
+    def route(self, fleet: "HapiFleet", req: "PostRequest",
+              alive: List["HapiServer"]) -> "HapiServer":
+        n_nodes = len(fleet.store.nodes)
+        replicas = set(fleet.store.replicas(req.object_name))
+        colocated = [s for s in alive if s.server_id % n_nodes in replicas]
+        cands = colocated or alive
+
+        # Least-loaded with tenant spreading: under fair queueing, prefer
+        # the replica holding the fewest of this tenant's requests so every
+        # replica's queue interleaves tenants (one tenant must not own a
+        # whole replica while sharing the storage tier); then queue depth,
+        # earliest accelerator availability, id.
+        def load(s: "HapiServer"):
+            tenant_here = (s.tenant_queue_depth(req.tenant)
+                           if fleet.fair_queueing else 0)
+            return (tenant_here, s.queue_depth(),
+                    min(a.busy_until for a in s.accels), s.server_id)
+
+        return min(cands, key=load)
+
+
+@dataclass
+class LeastLoadedRouting:
+    """Pure least-loaded: ignore replica locality entirely and send every
+    POST to the shallowest queue. The right policy when the storage tier's
+    internal network is fast enough that co-location stops mattering."""
+
+    name: str = "least-loaded"
+
+    def route(self, fleet: "HapiFleet", req: "PostRequest",
+              alive: List["HapiServer"]) -> "HapiServer":
+        return min(alive, key=lambda s: (
+            s.queue_depth(), min(a.busy_until for a in s.accels), s.server_id))
+
+
+# ---------------------------------------------------------------------------
+# Placement
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class PlacementPolicy(Protocol):
+    """Decides which storage nodes hold an object's replicas."""
+
+    name: str
+
+    def initial(self, index: int, n_nodes: int, replication: int) -> List[int]:
+        """Node indices for object #``index`` of a dataset at put time."""
+        ...
+
+    def observe(self, resp: "PostResponse") -> None:
+        """Called for every served POST (demand signal)."""
+        ...
+
+    def rebalance(self, fleet: "HapiFleet") -> List[Tuple[str, int]]:
+        """Extra ``(object_name, node)`` replicas to create now. Called
+        once per fleet scheduling round — must be cheap when idle."""
+        ...
+
+
+@dataclass
+class RoundRobinPlacement:
+    """The historical default: object *i*'s replicas land on nodes
+    ``(i + r) % n_nodes`` — static, demand-blind, never re-replicates."""
+
+    name: str = "round-robin"
+
+    def initial(self, index: int, n_nodes: int, replication: int) -> List[int]:
+        return [(index + r) % n_nodes for r in range(replication)]
+
+    def observe(self, resp: "PostResponse") -> None:
+        pass
+
+    def rebalance(self, fleet: "HapiFleet") -> List[Tuple[str, int]]:
+        return []
+
+
+@dataclass
+class DemandAwarePlacement:
+    """Demand-aware re-replication (ROADMAP): start round-robin, count
+    served POSTs per object, and when asked to rebalance add replicas for
+    the hottest under-replicated objects on the least-subscribed nodes.
+
+    ``max_new_per_round`` bounds churn per rebalance call;
+    ``hot_threshold`` is the minimum observed demand before an object is
+    worth another copy (cold data never spreads)."""
+
+    name: str = "demand-aware"
+    max_new_per_round: int = 8
+    hot_threshold: int = 2
+    demand: Dict[str, int] = field(default_factory=dict)
+
+    def initial(self, index: int, n_nodes: int, replication: int) -> List[int]:
+        return [(index + r) % n_nodes for r in range(replication)]
+
+    def observe(self, resp: "PostResponse") -> None:
+        self.demand[resp.object_name] = self.demand.get(resp.object_name, 0) + 1
+
+    def rebalance(self, fleet: "HapiFleet") -> List[Tuple[str, int]]:
+        # Called every scheduling round: bail out before building the
+        # node-subscription map unless something is actually hot.
+        if not any(c >= self.hot_threshold for c in self.demand.values()):
+            return []
+        store = fleet.store
+        n_nodes = len(store.nodes)
+        # Node subscription = how many objects each node already holds.
+        holds = [0] * n_nodes
+        for oname in store.objects:
+            for node in store.replicas(oname):
+                holds[node] += 1
+        # Hottest first; ties broken by name for determinism.
+        hot = sorted(self.demand.items(), key=lambda kv: (-kv[1], kv[0]))
+        new: List[Tuple[str, int]] = []
+        for oname, count in hot:
+            if len(new) >= self.max_new_per_round:
+                break
+            if count < self.hot_threshold:
+                break
+            have = set(store.replicas(oname))
+            missing = [n for n in range(n_nodes) if n not in have]
+            if not missing:
+                continue
+            target = min(missing, key=lambda n: (holds[n], n))
+            holds[target] += 1
+            new.append((oname, target))
+        return new
+
+
+# ---------------------------------------------------------------------------
+# Scaling
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class ScalingPolicy(Protocol):
+    """Decides fleet growth/shrink on every controller tick."""
+
+    name: str
+    min_servers: int
+    max_servers: int
+
+    def observe(self, resp: "PostResponse") -> None:
+        """Called for every served POST (latency/SLO signal)."""
+        ...
+
+    def decide(self, fleet: "HapiFleet") -> int:
+        """+1 = add a replica, -1 = retire one, 0 = hold."""
+        ...
+
+
+@dataclass
+class QueueDepthScaling:
+    """The historical default: hysteresis on mean waiting POSTs per alive
+    replica, with a cooldown between actions."""
+
+    name: str = "queue-depth"
+    min_servers: int = 1
+    max_servers: int = 8
+    scale_up_depth: float = 8.0
+    scale_down_depth: float = 0.5
+    cooldown_rounds: int = 4
+    _cooldown: int = 0
+
+    def observe(self, resp: "PostResponse") -> None:
+        pass
+
+    def decide(self, fleet: "HapiFleet") -> int:
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return 0
+        alive = fleet.n_alive
+        waiting = fleet.waiting_posts()
+        depth = waiting / max(alive, 1)
+        if depth > self.scale_up_depth and alive < self.max_servers:
+            self._cooldown = self.cooldown_rounds
+            return +1
+        if depth < self.scale_down_depth and alive > self.min_servers:
+            self._cooldown = self.cooldown_rounds
+            return -1
+        return 0
+
+
+@dataclass
+class SloScaling:
+    """SLO-miss-aware scaling (ROADMAP: signals beyond queue depth).
+
+    Watches the queueing delay of recently served POSTs — exactly what the
+    event log records — and scales up when the miss rate over the last
+    ``window`` responses exceeds ``up_miss_rate``. Scales down only when
+    the recent window is entirely within SLO *and* the fleet is idle
+    enough that a replica's queue is empty."""
+
+    name: str = "slo"
+    min_servers: int = 1
+    max_servers: int = 8
+    slo_delay: float = 0.5          # seconds of queueing a POST may absorb
+    up_miss_rate: float = 0.2       # >20% recent misses -> add a replica
+    window: int = 32                # responses considered "recent"
+    cooldown_rounds: int = 4
+    _delays: List[float] = field(default_factory=list)
+    _cooldown: int = 0
+
+    def observe(self, resp: "PostResponse") -> None:
+        self._delays.append(resp.queue_delay)
+        if len(self._delays) > self.window:
+            del self._delays[: len(self._delays) - self.window]
+
+    def decide(self, fleet: "HapiFleet") -> int:
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return 0
+        alive = fleet.n_alive
+        if self._delays:
+            misses = sum(1 for d in self._delays if d > self.slo_delay)
+            rate = misses / len(self._delays)
+        else:
+            rate = 0.0
+        if rate > self.up_miss_rate and alive < self.max_servers:
+            self._cooldown = self.cooldown_rounds
+            return +1
+        if (rate == 0.0 and alive > self.min_servers
+                and fleet.waiting_posts() == 0):
+            self._cooldown = self.cooldown_rounds
+            return -1
+        return 0
+
+
+DEFAULT_ROUTING = ReplicaAwareRouting
+DEFAULT_PLACEMENT = RoundRobinPlacement
+DEFAULT_SCALING = QueueDepthScaling
+
+# Name -> factory registries (CLI/config selection; factories accept the
+# dataclass fields of the respective policy as keyword arguments).
+ROUTING_POLICIES = {
+    "replica-aware": ReplicaAwareRouting,
+    "least-loaded": LeastLoadedRouting,
+}
+PLACEMENT_POLICIES = {
+    "round-robin": RoundRobinPlacement,
+    "demand-aware": DemandAwarePlacement,
+}
+SCALING_POLICIES = {
+    "queue-depth": QueueDepthScaling,
+    "slo": SloScaling,
+}

@@ -65,12 +65,18 @@ class HapiClient:
     :class:`~repro.cos.fleet.HapiFleet` — both expose the same
     ``store``/``submit``/``drain`` surface. When the server side carries a
     shared :class:`~repro.cos.clock.Simulator`, the client joins it so
-    its link and accelerator show up in the fleet-wide trace."""
+    its link and accelerator show up in the fleet-wide trace.
+
+    ``link=None`` creates the tenant's WAN link from
+    ``hapi.network_bandwidth`` — the common case, and what
+    :meth:`repro.api.HapiCluster.tenant` relies on. Multi-tenant
+    deployments should be stood up through that facade rather than by
+    wiring clients to fleets by hand."""
 
     def __init__(
         self,
         server: "HapiServer",
-        link: Link,
+        link: Optional[Link],
         profile: LayerProfile,
         hapi: HapiConfig,
         model_key: str,
@@ -85,6 +91,8 @@ class HapiClient:
         push_training: bool = False,           # ALL_IN_COS comparison mode
     ) -> None:
         self.server = server
+        if link is None:
+            link = Link(name=f"wan{tenant}", bandwidth=hapi.network_bandwidth)
         self.link = link
         self.profile = profile
         self.hapi = hapi

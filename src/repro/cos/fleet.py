@@ -5,10 +5,12 @@ request, so horizontal scaling is "just add queues". This module is that
 step — a :class:`HapiFleet` that fronts N :class:`HapiServer` replicas
 with:
 
-* **replica-aware + least-loaded routing** — a POST prefers replicas
-  co-located with a storage node holding the object (server *i* sits
-  next to storage node ``i % n_nodes``, Swift-style), breaking ties by
-  queue depth;
+* **pluggable routing** — which replica serves a POST is a
+  :class:`~repro.api.policies.RoutingPolicy` (default: replica-aware +
+  least-loaded with tenant spreading);
+* **pluggable placement** — where object replicas live, including
+  demand-aware re-replication while the fleet runs, is a
+  :class:`~repro.api.policies.PlacementPolicy`;
 * **per-tenant fair queueing** — pending POSTs are kept in per-tenant
   queues and dispatched round-robin across tenants, so one tenant's
   burst cannot starve another;
@@ -16,22 +18,39 @@ with:
   each in-flight request; when a replica dies its queue is lost
   (stateless crash) and the fleet re-issues the lost requests to the
   survivors, exactly the client re-issue the paper relies on;
-* **queue-depth autoscaling** — a simple hysteresis policy adds a
-  replica when mean depth per alive server crosses a high-watermark and
-  retires an idle one below the low-watermark.
+* **pluggable autoscaling** — growth/shrink decisions are a
+  :class:`~repro.api.policies.ScalingPolicy` (queue-depth hysteresis by
+  default, SLO-miss-aware as an alternative);
+* **fleet-wide live execution** — :meth:`register_executor` threads a
+  real JAX forward function to every replica, including replicas the
+  autoscaler spawns later, so live-mode multi-replica runs exercise
+  real kernels.
 
 All replicas, the object store, and the clients share one
 :class:`~repro.cos.clock.Simulator`: a single event queue with
 deterministic ordering, so the same seed reproduces the same trace
-byte-for-byte (asserted by tests/test_fleet.py and
+byte-for-byte under any policy combination (asserted by
+tests/test_fleet.py, tests/test_api_cluster.py and
 benchmarks/fleet_scaling.py).
+
+Prefer standing fleets up through :class:`repro.api.HapiCluster` — the
+facade owns the simulator/store/fleet/client wiring so callers never
+assemble it by hand.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.api.policies import (
+    PlacementPolicy,
+    QueueDepthScaling,
+    ReplicaAwareRouting,
+    RoundRobinPlacement,
+    RoutingPolicy,
+    ScalingPolicy,
+)
 from repro.cos.clock import Simulator
 from repro.cos.objectstore import ObjectStore
 from repro.cos.server import HapiServer, PostRequest, PostResponse
@@ -39,13 +58,25 @@ from repro.cos.server import HapiServer, PostRequest, PostResponse
 
 @dataclass(frozen=True)
 class AutoscalePolicy:
-    """Queue-depth hysteresis autoscaler (depth = waiting POSTs per alive
-    replica, averaged over the fleet)."""
+    """Back-compat parameter block for the queue-depth autoscaler.
+
+    Kept as the concise way to say "autoscale with these watermarks";
+    the fleet converts it into a
+    :class:`~repro.api.policies.QueueDepthScaling` strategy. Pass
+    ``scaling=`` for any other policy."""
     min_servers: int = 1
     max_servers: int = 8
     scale_up_depth: float = 8.0
     scale_down_depth: float = 0.5
     cooldown_rounds: int = 4
+
+    def to_policy(self) -> QueueDepthScaling:
+        return QueueDepthScaling(
+            min_servers=self.min_servers, max_servers=self.max_servers,
+            scale_up_depth=self.scale_up_depth,
+            scale_down_depth=self.scale_down_depth,
+            cooldown_rounds=self.cooldown_rounds,
+        )
 
 
 @dataclass
@@ -66,7 +97,9 @@ class TenantStats:
 class HapiFleet:
     """Drop-in for :class:`HapiServer` from the client's point of view
     (``store`` / ``submit`` / ``drain`` / ``adapt_results``) that routes
-    across N stateless replicas."""
+    across N stateless replicas. Control behavior is delegated to the
+    routing/placement/scaling strategies (see :mod:`repro.api.policies`);
+    the defaults reproduce the historical hard-coded behavior exactly."""
 
     def __init__(
         self,
@@ -77,18 +110,31 @@ class HapiFleet:
         seed: int = 0,
         fair_queueing: bool = True,
         autoscale: Optional[AutoscalePolicy] = None,
+        routing: Optional[RoutingPolicy] = None,
+        placement: Optional[PlacementPolicy] = None,
+        scaling: Optional[ScalingPolicy] = None,
         **server_kwargs,
     ) -> None:
         self.sim = sim if sim is not None else Simulator(seed)
         self.store = store.attach_sim(self.sim)
+        self.routing: RoutingPolicy = routing or ReplicaAwareRouting()
+        if scaling is None and autoscale is not None:
+            scaling = autoscale.to_policy()
+        self.scaling: Optional[ScalingPolicy] = scaling
+        # Placement precedence: explicit arg, then whatever the store was
+        # built with, then the static default. The chosen policy is pushed
+        # back onto the store so later put_dataset calls agree with it.
+        if placement is None:
+            placement = getattr(store, "placement", None) or RoundRobinPlacement()
+        self.placement: PlacementPolicy = placement
+        self.store.placement = placement
         self._server_kwargs = dict(server_kwargs)
+        self._executors: Dict[str, Callable] = {}
         self.servers: List[HapiServer] = [
             HapiServer(store, server_id=i, sim=self.sim, **server_kwargs)
             for i in range(n_servers)
         ]
         self.fair_queueing = fair_queueing
-        self.autoscale = autoscale
-        self._as_cooldown = 0
         # Per-tenant FIFO queues, dispatched round-robin by tenant id.
         self._pending: Dict[int, Deque[PostRequest]] = {}
         self._inflight: Dict[int, int] = {}          # req_id -> server index
@@ -119,6 +165,21 @@ class HapiFleet:
     def adapt_results_by_server(self) -> Dict[int, list]:
         return {s.server_id: list(s.adapt_results) for s in self.servers}
 
+    def waiting_posts(self) -> int:
+        """Scaling signal: POSTs not yet being executed — pending at the
+        fleet plus queued on alive replicas."""
+        return sum(len(q) for q in self._pending.values()) + \
+            sum(s.queue_depth() for s in self._alive())
+
+    # -- live execution --------------------------------------------------------
+    def register_executor(self, model_key: str, fn: Callable) -> None:
+        """Register a real JAX forward ``fn(payload, split, cos_batch)``
+        fleet-wide: on every current replica and on any replica the
+        autoscaler spawns later (ROADMAP: live-mode multi-replica runs)."""
+        self._executors[model_key] = fn
+        for s in self.servers:
+            s.register_executor(model_key, fn)
+
     # -- elasticity ------------------------------------------------------------
     def kill(self, server_id: int) -> None:
         """Crash one replica. Its queue is lost (stateless crash); the
@@ -135,7 +196,8 @@ class HapiFleet:
 
     def add_server(self) -> HapiServer:
         """Scale up: revive a dead replica if any, else spawn a fresh one
-        (stateless servers make both identical)."""
+        (stateless servers make both identical). New replicas inherit the
+        fleet-wide executor registry."""
         for s in self.servers:
             if not s.alive:
                 s.restart()
@@ -143,6 +205,8 @@ class HapiFleet:
                 return s
         s = HapiServer(self.store, server_id=len(self.servers), sim=self.sim,
                        **self._server_kwargs)
+        for key, fn in self._executors.items():
+            s.register_executor(key, fn)
         self.servers.append(s)
         self.sim.record(self._vtime, "scale-up", f"s{s.server_id}")
         return s
@@ -150,9 +214,9 @@ class HapiFleet:
     def remove_server(self) -> Optional[HapiServer]:
         """Scale down: retire the idle replica with the highest id (its
         queue must be empty — stateless, nothing to migrate)."""
+        floor = self.scaling.min_servers if self.scaling else 1
         idle = [s for s in self._alive() if not s.queue]
-        if len(self._alive()) <= (self.autoscale.min_servers
-                                  if self.autoscale else 1) or not idle:
+        if len(self._alive()) <= floor or not idle:
             return None
         victim = max(idle, key=lambda s: s.server_id)
         victim.kill()
@@ -168,30 +232,6 @@ class HapiFleet:
         ts = self.tenant_stats.setdefault(req.tenant, TenantStats())
         ts.first_arrival = min(ts.first_arrival, req.arrival)
         self.sim.record(req.arrival, "post", f"t{req.tenant} {req.object_name}")
-
-    def _route(self, req: PostRequest) -> HapiServer:
-        """Replica-aware least-loaded: prefer replicas co-located with a
-        storage node holding the object; tie-break by queue depth then id."""
-        alive = self._alive()
-        if not alive:
-            raise ConnectionError("hapi fleet down")
-        n_nodes = len(self.store.nodes)
-        replicas = set(self.store.replicas(req.object_name))
-        colocated = [s for s in alive if s.server_id % n_nodes in replicas]
-        cands = colocated or alive
-
-        # Least-loaded with tenant spreading: under fair queueing, prefer
-        # the replica holding the fewest of this tenant's requests so every
-        # replica's queue interleaves tenants (one tenant must not own a
-        # whole replica while sharing the storage tier); then queue depth,
-        # earliest accelerator availability, id.
-        def load(s: HapiServer):
-            tenant_here = (sum(1 for q in s.queue if q.tenant == req.tenant)
-                           if self.fair_queueing else 0)
-            return (tenant_here, s.queue_depth(),
-                    min(a.busy_until for a in s.accels), s.server_id)
-
-        return min(cands, key=load)
 
     def dispatch(self) -> int:
         """Move pending requests onto replicas, round-robin across tenants
@@ -215,7 +255,10 @@ class HapiFleet:
         return n
 
     def _dispatch_one(self, req: PostRequest) -> int:
-        server = self._route(req)
+        alive = self._alive()
+        if not alive:
+            raise ConnectionError("hapi fleet down")
+        server = self.routing.route(self, req, alive)
         server.submit(req)
         self._inflight[req.req_id] = self.servers.index(server)
         self.sim.record(max(self._vtime, req.arrival), "route",
@@ -253,25 +296,27 @@ class HapiFleet:
         if moved:
             self.sim.record(self._vtime, "rebalance", f"moved={moved}")
 
+    def _re_replicate(self) -> int:
+        """Ask the placement policy for extra replicas (demand-aware
+        policies spread hot objects as demand is observed and when the
+        fleet grows past the replica count); static policies return
+        nothing. Called once per drain scheduling round."""
+        made = 0
+        for oname, node in self.placement.rebalance(self):
+            if self.store.add_replica(oname, node):
+                made += 1
+        return made
+
     # -- autoscaling -----------------------------------------------------------
     def _autoscale_step(self) -> None:
-        if self.autoscale is None:
+        if self.scaling is None:
             return
-        if self._as_cooldown > 0:
-            self._as_cooldown -= 1
-            return
-        pol = self.autoscale
-        alive = self._alive()
-        waiting = sum(len(q) for q in self._pending.values()) + \
-            sum(s.queue_depth() for s in alive)
-        depth = waiting / max(len(alive), 1)
-        if depth > pol.scale_up_depth and len(alive) < pol.max_servers:
+        decision = self.scaling.decide(self)
+        if decision > 0:
             self.add_server()
             self._rebalance()
-            self._as_cooldown = pol.cooldown_rounds
-        elif depth < pol.scale_down_depth and len(alive) > pol.min_servers:
-            if self.remove_server() is not None:
-                self._as_cooldown = pol.cooldown_rounds
+        elif decision < 0:
+            self.remove_server()
 
     # -- serving ----------------------------------------------------------------
     def _work_remains(self) -> bool:
@@ -297,6 +342,7 @@ class HapiFleet:
                 raise ConnectionError("hapi fleet down")
             self.dispatch()
             self._autoscale_step()
+            self._re_replicate()       # placement tick: demand-aware
             active = [s for s in self._alive() if s.queue]
             if not active:
                 # in-flight on dead replicas only: loop re-issues them
@@ -333,6 +379,9 @@ class HapiFleet:
         ts.act_bytes += resp.act_bytes
         ts.first_arrival = min(ts.first_arrival, resp.arrival)
         ts.last_finish = max(ts.last_finish, resp.finished)
+        self.placement.observe(resp)
+        if self.scaling is not None:
+            self.scaling.observe(resp)
 
     # -- metrics -----------------------------------------------------------------
     def makespan(self) -> float:

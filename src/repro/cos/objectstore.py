@@ -25,11 +25,18 @@ class StoredObject:
 
 
 class ObjectStore:
+    """``placement`` is any object with an
+    ``initial(index, n_nodes, replication) -> List[int]`` method (see
+    :class:`repro.api.policies.PlacementPolicy`); the store stays
+    dependency-free by duck-typing it and defaulting to the historical
+    round-robin layout."""
+
     def __init__(
         self,
         n_storage_nodes: int = 3,
         replication: int = 3,
         internal_bandwidth: float = 5e9,   # NVMe-class per node
+        placement=None,
     ) -> None:
         self.objects: Dict[str, StoredObject] = {}
         self.nodes = [
@@ -37,6 +44,7 @@ class ObjectStore:
             for i in range(n_storage_nodes)
         ]
         self.replication = min(replication, n_storage_nodes)
+        self.placement = placement
         self._placement: Dict[str, List[int]] = {}
         self.sim: Optional[Simulator] = None
 
@@ -60,9 +68,11 @@ class ObjectStore:
             nbytes = sum(int(v.nbytes) for v in payload.values())
             oname = f"{name}/part-{i:05d}"
             self.objects[oname] = StoredObject(oname, payload, nbytes, hi - lo)
-            self._placement[oname] = [
-                (i + r) % len(self.nodes) for r in range(self.replication)
-            ]
+            if self.placement is not None:
+                nodes = self.placement.initial(i, len(self.nodes), self.replication)
+            else:
+                nodes = [(i + r) % len(self.nodes) for r in range(self.replication)]
+            self._placement[oname] = [n % len(self.nodes) for n in nodes]
             names.append(oname)
         return names
 
@@ -73,6 +83,25 @@ class ObjectStore:
         """Storage-node indices holding a replica of ``oname`` (used by the
         fleet's replica-aware router)."""
         return list(self._placement[oname])
+
+    def add_replica(self, oname: str, node: int) -> bool:
+        """Create an extra replica of ``oname`` on ``node`` (demand-aware
+        re-replication). Charged as an internal copy from the currently
+        least-busy existing replica; returns False if already present."""
+        node = node % len(self.nodes)
+        if node in self._placement[oname]:
+            return False
+        obj = self.objects[oname]
+        src = min((self.nodes[r] for r in self._placement[oname]),
+                  key=lambda nd: (nd.busy_until, nd.name))
+        t0 = self.sim.now if self.sim is not None else src.busy_until
+        _, read_done = src.transfer(t0, obj.nbytes)
+        _, done = self.nodes[node].transfer(read_done, obj.nbytes)
+        self._placement[oname].append(node)
+        if self.sim is not None:
+            self.sim.record(done, "store.replicate",
+                            f"{oname} -> {self.nodes[node].name}")
+        return True
 
     # -- storage request (proxy <- storage node) ------------------------------
     def read(self, oname: str, t: float, node_choice: int = 0) -> Tuple[StoredObject, float]:
@@ -91,6 +120,32 @@ class ObjectStore:
         return sum(self.objects[o].nbytes for o in self.object_names(dataset))
 
 
+def put_synthetic_dataset(
+    store: ObjectStore,
+    dataset: str = "imagenet",
+    n_samples: int = 8000,
+    object_size: int = 1000,
+    img_bytes: Optional[int] = 110_000,
+    n_classes: int = 1000,
+    seed: int = 0,
+) -> List[str]:
+    """Store an ImageNet-shaped synthetic dataset in fixed-size objects,
+    with on-wire object sizes forced to the paper's ~110 KB/image (payload
+    arrays stay tiny so CPU runs are fast; ``img_bytes=None`` keeps true
+    payload sizes). The single generator behind
+    :func:`synthetic_image_store` and ``HapiCluster.with_dataset``."""
+    rng = np.random.default_rng(seed)
+    names = store.put_dataset(dataset, {
+        "x": rng.normal(size=(n_samples, 8, 8, 3)).astype(np.float32),
+        "y": rng.integers(0, n_classes, size=(n_samples,)).astype(np.int32),
+    }, object_size=object_size)
+    if img_bytes is not None:
+        for oname in names:
+            store.objects[oname].nbytes = \
+                store.objects[oname].n_samples * img_bytes
+    return names
+
+
 def synthetic_image_store(
     dataset: str = "imagenet",
     n_samples: int = 8000,
@@ -99,15 +154,10 @@ def synthetic_image_store(
     n_classes: int = 1000,
     seed: int = 0,
 ) -> ObjectStore:
-    """The benchmark/example/test workload: an ImageNet-shaped dataset in
-    fixed-size objects, with on-wire object sizes forced to the paper's
-    ~110 KB/image (payload arrays stay tiny so CPU runs are fast)."""
+    """The benchmark/example/test workload (see
+    :func:`put_synthetic_dataset`) on a fresh default store."""
     store = ObjectStore()
-    rng = np.random.default_rng(seed)
-    store.put_dataset(dataset, {
-        "x": rng.normal(size=(n_samples, 8, 8, 3)).astype(np.float32),
-        "y": rng.integers(0, n_classes, size=(n_samples,)).astype(np.int32),
-    }, object_size=object_size)
-    for o in store.objects.values():
-        o.nbytes = o.n_samples * img_bytes
+    put_synthetic_dataset(store, dataset, n_samples=n_samples,
+                          object_size=object_size, img_bytes=img_bytes,
+                          n_classes=n_classes, seed=seed)
     return store

@@ -283,6 +283,11 @@ class HapiServer:
         """Routing/autoscaling signal: requests waiting on this replica."""
         return len(self.queue)
 
+    def tenant_queue_depth(self, tenant: int) -> int:
+        """Routing signal: this tenant's requests waiting on this replica
+        (tenant-spreading routers keep it low on every replica)."""
+        return sum(1 for r in self.queue if r.tenant == tenant)
+
 
 def _leaves(x):
     import jax

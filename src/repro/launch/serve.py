@@ -8,10 +8,12 @@ On CPU this runs the reduced config (--smoke default); on real hardware
 the same driver jits the full config over the production mesh with the
 flash-decode cache sharding of distributed/sharding.cache_pspecs.
 
-``--cos-fleet N`` instead launches N stateless Hapi server replicas on
-the shared discrete-event simulator (with queue-depth autoscaling up to
-``--max-servers``) and serves a multi-tenant feature-extraction
-workload, printing per-replica and per-tenant throughput.
+``--cos-fleet N`` instead stands up an N-replica HAPI deployment through
+the :class:`repro.api.HapiCluster` facade (autoscaling up to
+``--max-servers``; fleet policies selectable with ``--routing``,
+``--placement``, ``--scaling``) and serves a multi-tenant
+feature-extraction workload, printing per-replica and per-tenant
+throughput.
 """
 from __future__ import annotations
 
@@ -80,47 +82,40 @@ def serve(arch: str, *, batch: int = 4, prompt_len: int = 32,
 
 
 def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
-                    max_servers: int = 8, autoscale: bool = True):
-    """Drive a HapiFleet with a multi-tenant burst workload and report
-    served throughput per replica and per tenant."""
-    from repro.core.profiler import profile_layered
-    from repro.cos.fleet import AutoscalePolicy, HapiFleet
-    from repro.cos.objectstore import synthetic_image_store
-    from repro.cos.server import PostRequest
-    from repro.config import HapiConfig
-    from repro.core.splitter import choose_split
+                    max_servers: int = 8, autoscale: bool = True,
+                    routing: str = "replica-aware",
+                    placement: str = "round-robin",
+                    scaling: str = "queue-depth"):
+    """Drive a HAPI deployment through the :class:`repro.api.HapiCluster`
+    facade with a multi-tenant burst workload and report served
+    throughput per replica and per tenant. ``routing``/``placement``/
+    ``scaling`` select fleet policies by registry name."""
+    from repro.api import (HapiCluster, PLACEMENT_POLICIES, ROUTING_POLICIES,
+                           SCALING_POLICIES)
     from repro.models.vision import PAPER_MODELS
 
-    store = synthetic_image_store("serve", seed=seed)
-
-    policy = AutoscalePolicy(min_servers=1, max_servers=max_servers) \
-        if autoscale else None
-    fleet = HapiFleet(store, n_servers=n_servers, seed=seed,
-                      autoscale=policy, n_accelerators=2,
-                      flops_per_accel=65e12)
-    hapi = HapiConfig()
+    cluster = (HapiCluster(seed=seed)
+               .with_servers(n_servers, n_accelerators=2,
+                             flops_per_accel=65e12)
+               .with_dataset("serve", content_seed=seed)
+               .with_routing(ROUTING_POLICIES[routing]())
+               .with_placement(PLACEMENT_POLICIES[placement]()))
+    if autoscale:
+        cluster.with_scaling(SCALING_POLICIES[scaling](
+            min_servers=1, max_servers=max_servers))
     names = list(PAPER_MODELS)
-    rid = 0
     for t in range(n_tenants):
-        mname = names[t % len(names)]
-        prof = profile_layered(PAPER_MODELS[mname](1000))
-        split = choose_split(prof, hapi, 1000).split_index
-        for oname in store.object_names("serve"):
-            rid += 1
-            fleet.submit(PostRequest(
-                req_id=rid, tenant=t, model_key=mname, split=split,
-                object_name=oname, b_max=hapi.cos_batch, profile=prof,
-                arrival=float(fleet.sim.rng.uniform(0.0, 0.005)),
-            ))
-    responses = fleet.drain()
+        cluster.submit_burst("serve", names[t % len(names)], tenant=t,
+                             train_batch=1000)
+    responses = cluster.drain()
+    report = cluster.report()
     return {
         "served": len(responses),
-        "makespan": fleet.makespan(),
-        "n_alive": fleet.n_alive,
-        "served_by_server": dict(sorted(fleet.served_by_server.items())),
-        "tenant_throughput": {t: s.throughput
-                              for t, s in sorted(fleet.tenant_stats.items())},
-        "scale_events": fleet.scale_events(),
+        "makespan": report.makespan,
+        "n_alive": report.n_alive,
+        "served_by_server": report.served_by_server,
+        "tenant_throughput": report.tenant_throughput,
+        "scale_events": report.scale_events,
     }
 
 
@@ -136,10 +131,21 @@ def main(argv=None):
     ap.add_argument("--tenants", type=int, default=3)
     ap.add_argument("--max-servers", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    from repro.api import (PLACEMENT_POLICIES, ROUTING_POLICIES,
+                           SCALING_POLICIES)
+
+    ap.add_argument("--routing", default="replica-aware",
+                    choices=sorted(ROUTING_POLICIES))
+    ap.add_argument("--placement", default="round-robin",
+                    choices=sorted(PLACEMENT_POLICIES))
+    ap.add_argument("--scaling", default="queue-depth",
+                    choices=sorted(SCALING_POLICIES))
     args = ap.parse_args(argv)
     if args.cos_fleet:
         out = serve_cos_fleet(args.cos_fleet, n_tenants=args.tenants,
-                              seed=args.seed, max_servers=args.max_servers)
+                              seed=args.seed, max_servers=args.max_servers,
+                              routing=args.routing, placement=args.placement,
+                              scaling=args.scaling)
         print(f"served {out['served']} POSTs in {out['makespan']:.3f}s "
               f"({out['n_alive']} replicas alive)")
         print(f"per-server: {out['served_by_server']}")

@@ -1,0 +1,269 @@
+"""`repro.api` facade + pluggable-policy tests: cross-policy determinism
+(same seed => byte-identical event log for every policy combination),
+no lost objects under kill/restart with any policy swap, fleet-wide live
+JAX execution (>= 2 replicas, real kernels), and facade behavior."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    DemandAwarePlacement,
+    HapiCluster,
+    LeastLoadedRouting,
+    QueueDepthScaling,
+    ReplicaAwareRouting,
+    RoundRobinPlacement,
+    SloScaling,
+    TenantSpec,
+)
+from repro.core.profiler import profile_layered
+from repro.models.vision import alexnet
+
+ROUTINGS = (ReplicaAwareRouting, LeastLoadedRouting)
+PLACEMENTS = (RoundRobinPlacement, DemandAwarePlacement)
+SCALINGS = (QueueDepthScaling, SloScaling)
+COMBOS = list(itertools.product(ROUTINGS, PLACEMENTS, SCALINGS))
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return profile_layered(alexnet(100))
+
+
+def make_cluster(seed=0, *, routing, placement, scaling, n_servers=2,
+                 n_nodes=4, replication=2):
+    return (HapiCluster(seed=seed)
+            .with_servers(n_servers)
+            .with_storage(n_nodes=n_nodes, replication=replication)
+            .with_dataset("ds", n_samples=2000, object_size=500,
+                          n_classes=100)
+            .with_policies(routing=routing(), placement=placement(),
+                           scaling=scaling(max_servers=4) if scaling else None))
+
+
+# ---------------------------------------------------------------------------
+# Determinism across policy combinations
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("routing,placement,scaling", COMBOS,
+                         ids=lambda c: getattr(c, "__name__", str(c)))
+def test_same_seed_identical_event_log_per_policy_combo(routing, placement,
+                                                        scaling):
+    def run():
+        c = make_cluster(seed=11, routing=routing, placement=placement,
+                         scaling=scaling)
+        c.submit_burst("ds", "alexnet", tenant=0, n_classes=100)
+        c.submit_burst("ds", "alexnet", tenant=1, n_classes=100)
+        c.drain()
+        return c.event_digest()
+
+    first, second = run(), run()
+    assert first == second
+    assert len(first) > 20        # non-trivial trace
+
+
+def test_routing_policies_actually_differ():
+    """The two routing strategies are not accidentally aliases: on a
+    store whose replicas cover only some nodes, their traces diverge."""
+    def run(routing):
+        c = make_cluster(seed=3, routing=routing,
+                         placement=RoundRobinPlacement, scaling=None,
+                         n_servers=2, n_nodes=4, replication=1)
+        for t in (0, 1):
+            c.submit_burst("ds", "alexnet", tenant=t, n_classes=100)
+        c.drain()
+        return c.event_digest()
+
+    assert run(ReplicaAwareRouting) != run(LeastLoadedRouting)
+
+
+# ---------------------------------------------------------------------------
+# Elasticity under every policy combination: nothing lost
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("routing,placement,scaling", COMBOS,
+                         ids=lambda c: getattr(c, "__name__", str(c)))
+def test_kill_restart_loses_no_objects_any_policy(routing, placement,
+                                                  scaling):
+    c = make_cluster(seed=0, routing=routing, placement=placement,
+                     scaling=scaling)
+    objects = c.store.object_names("ds")
+    ids = []
+    for t in (0, 1):
+        ids += c.submit_burst("ds", "alexnet", tenant=t, n_classes=100)
+    fleet = c.fleet
+    fleet.dispatch()                      # requests now sit on replicas
+    victim = next(s for s in fleet.servers if s.queue)
+    c.kill(victim.server_id)
+    c.restart(victim.server_id)           # restart before drain: still safe
+    responses = c.drain()
+
+    assert len(responses) == len(ids)
+    served = {(r.tenant, r.object_name) for r in responses}
+    assert served == {(t, o) for t in (0, 1) for o in objects}
+    assert fleet.reissued >= 1
+
+
+# ---------------------------------------------------------------------------
+# New policy behaviors
+# ---------------------------------------------------------------------------
+def test_demand_aware_placement_re_replicates_hot_objects():
+    c = (HapiCluster(seed=0)
+         .with_servers(1)
+         .with_storage(n_nodes=4, replication=1)
+         .with_dataset("ds", n_samples=2000, object_size=500, n_classes=100)
+         .with_placement(DemandAwarePlacement(hot_threshold=1))
+         .with_scaling(QueueDepthScaling(max_servers=4, scale_up_depth=1.0,
+                                         cooldown_rounds=0)))
+    before = {o: len(c.store.replicas(o)) for o in c.store.object_names("ds")}
+    assert all(n == 1 for n in before.values())
+    for t in range(3):
+        c.submit_burst("ds", "alexnet", tenant=t, n_classes=100)
+    c.drain()
+    after = {o: len(c.store.replicas(o)) for o in c.store.object_names("ds")}
+    assert any(after[o] > before[o] for o in after), \
+        "demand-aware placement must add replicas for hot objects"
+    kinds = {e[1] for e in c.sim.log.events}
+    assert "store.replicate" in kinds
+
+
+def test_slo_scaling_grows_fleet_on_misses():
+    c = (HapiCluster(seed=0)
+         .with_servers(1)
+         .with_dataset("ds", n_samples=4000, object_size=500, n_classes=100)
+         .with_scaling(SloScaling(slo_delay=1e-4, up_miss_rate=0.1,
+                                  max_servers=4, cooldown_rounds=0)))
+    for t in (0, 1):
+        c.submit_burst("ds", "alexnet", tenant=t, n_classes=100)
+    c.drain()
+    assert c.report().n_servers > 1
+    assert "scale-up" in [e[1] for e in c.report().scale_events]
+
+
+# ---------------------------------------------------------------------------
+# Fleet-wide live JAX execution
+# ---------------------------------------------------------------------------
+def test_live_executor_fleet_run_multi_replica():
+    """>= 2 replicas execute REAL feature extraction: activations of every
+    response match a local forward of that object's payload."""
+    import jax
+    import jax.numpy as jnp
+
+    vm = alexnet(10)
+    params = vm.init(jax.random.PRNGKey(0))
+    prof = profile_layered(vm)
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(128, 224, 224, 3)).astype(np.float32)
+    split = 5
+
+    c = (HapiCluster(seed=0)
+         .with_servers(2, n_accelerators=1)
+         .with_routing(LeastLoadedRouting())     # force spread over replicas
+         .with_dataset("live", {"x": x}, object_size=32)
+         .with_executor("alexnet", lambda payload, s, b: vm.apply_range(
+             params, jnp.asarray(payload["x"]), 0, s)))
+    c.submit_burst("live", "alexnet", tenant=0, split=split, jitter=0.0,
+                   n_classes=10)
+    responses = c.drain()
+
+    assert len(responses) == 4
+    assert len({r.server_id for r in responses}) >= 2, \
+        "live run must exercise more than one replica"
+    for r in responses:
+        assert r.acts is not None
+        lo = int(r.object_name.split("-")[-1]) * 32
+        expected = vm.apply_range(params, jnp.asarray(x[lo:lo + 32]), 0, split)
+        np.testing.assert_allclose(np.asarray(r.acts), np.asarray(expected),
+                                   atol=1e-4)
+
+
+def test_scaled_up_replica_inherits_executors():
+    """register_executor threads through the fleet to replicas spawned by
+    the autoscaler later (ROADMAP: fleet + live JAX execution)."""
+    import jax
+    import jax.numpy as jnp
+
+    vm = alexnet(10)
+    params = vm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(256, 224, 224, 3)).astype(np.float32)
+
+    c = (HapiCluster(seed=0)
+         .with_servers(1, n_accelerators=1)
+         .with_dataset("live", {"x": x}, object_size=32)
+         .with_scaling(QueueDepthScaling(scale_up_depth=1.0, max_servers=3,
+                                         cooldown_rounds=0))
+         .with_executor("alexnet", lambda payload, s, b: vm.apply_range(
+             params, jnp.asarray(payload["x"]), 0, s)))
+    for t in (0, 1):
+        c.submit_burst("live", "alexnet", tenant=t, split=3, jitter=0.0,
+                       n_classes=10)
+    responses = c.drain()
+
+    assert c.report().n_servers > 1          # the autoscaler grew the fleet
+    assert all(r.acts is not None for r in responses), \
+        "every replica (including scaled-up ones) must run the executor"
+    assert all("alexnet" in s.executors for s in c.fleet.servers)
+
+
+# ---------------------------------------------------------------------------
+# Facade behavior
+# ---------------------------------------------------------------------------
+def test_tenant_handles_auto_ids_and_epochs(prof):
+    c = (HapiCluster(seed=0)
+         .with_servers(2, n_accelerators=2, flops_per_accel=65e12)
+         .with_dataset("imagenet", n_samples=2000, n_classes=100))
+    t0 = c.tenant(TenantSpec(model="alexnet", profile=prof,
+                             bandwidth=1e9 / 8, client_flops=65e12))
+    t1 = c.tenant(TenantSpec(model="alexnet", profile=prof,
+                             bandwidth=1e9 / 8, client_flops=65e12))
+    assert (t0.tenant_id, t1.tenant_id) == (0, 1)
+    r0 = t0.run_epoch("imagenet", train_batch=1000, max_iterations=1)
+    r1 = t1.run_epoch("imagenet", train_batch=1000, max_iterations=1)
+    assert not r0.oom and not r1.oom
+    assert t0.stats().posts >= 1 and t1.stats().posts >= 1
+    rep = c.report()
+    assert rep.served == sum(rep.served_by_server.values()) > 0
+    assert set(rep.tenant_throughput) == {0, 1}
+    assert rep.as_dict()["served"] == rep.served
+
+
+def test_topology_frozen_after_build():
+    c = HapiCluster(seed=0).with_servers(2)
+    c.build()
+    with pytest.raises(RuntimeError):
+        c.with_servers(4)
+    with pytest.raises(RuntimeError):
+        c.with_routing(LeastLoadedRouting())
+    # Datasets and executors stay addable on a live cluster.
+    c.with_dataset("late", n_samples=500, object_size=500, n_classes=100)
+    assert c.store.object_names("late")
+
+
+def test_mixed_tenant_and_burst_request_ids_do_not_collide(prof):
+    """Both facade entry points on one cluster: client-issued ids
+    (tenant * 1_000_000 + i) and burst ids live in disjoint ranges, so
+    in-flight tracking never cross-wires them."""
+    c = (HapiCluster(seed=0)
+         .with_servers(2, n_accelerators=2, flops_per_accel=65e12)
+         .with_dataset("ds", n_samples=2000, object_size=500, n_classes=100))
+    burst_ids = c.submit_burst("ds", "alexnet", tenant=5, n_classes=100)
+    handle = c.tenant(TenantSpec(model="alexnet", profile=prof,
+                                 bandwidth=1e9 / 8, client_flops=65e12))
+    res = handle.run_epoch("ds", train_batch=1000, max_iterations=2)
+    assert not res.oom and res.n_iterations == 2
+    served = c.fleet.tenant_stats
+    assert served[5].posts == len(burst_ids)   # the whole burst was served
+    assert len(set(burst_ids) & set(range(0, 10_000_000))) == 0
+
+
+def test_cluster_seed_controls_trace():
+    def run(seed):
+        c = (HapiCluster(seed=seed).with_servers(2)
+             .with_dataset("ds", n_samples=1000, object_size=500,
+                           n_classes=100))
+        c.submit_burst("ds", "alexnet", tenant=0, n_classes=100)
+        c.drain()
+        return c.event_digest()
+
+    assert run(4) == run(4)
+    assert run(4) != run(9)      # jittered arrivals come from the seed

@@ -9,7 +9,7 @@ from repro.core.cost_model import (
     roofline_epoch_time,
     transferred_per_iteration,
 )
-from tests_profiles import tiny_profile
+from test_profiles import tiny_profile
 
 
 def test_paper_eq_monotonicity():

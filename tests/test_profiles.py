@@ -1,0 +1,45 @@
+"""Shared synthetic profiles for tests — plus sanity tests of the shared
+fixture itself (this file was previously named ``tests_profiles.py`` and
+never collected, so nothing guarded the fixture's invariants)."""
+from repro.core.profiler import LayerProfile
+
+
+def tiny_profile(n=8, input_bytes=1e7):
+    out = [9e6, 8e6, 5e6, 3e6, 2e6, 1e6, 9e5, 5e5][:n]
+    return LayerProfile(
+        name="tiny", n_boundaries=n + 1, input_bytes=input_bytes,
+        out_bytes=[input_bytes] + out,
+        cum_flops=[0.0] + [1e9 * (i + 1) for i in range(n)],
+        act_peak_bytes=[input_bytes] + [6 * b for b in out],
+        prefix_param_bytes=[1e6 * i for i in range(n + 1)],
+        model_param_bytes=1e6 * n,
+        freeze_index=max(1, n * 3 // 4),
+    )
+
+
+def test_tiny_profile_invariants():
+    prof = tiny_profile()
+    n = prof.n_boundaries
+    # Every per-boundary list covers boundaries 0..n-1.
+    assert len(prof.out_bytes) == n
+    assert len(prof.cum_flops) == n
+    assert len(prof.act_peak_bytes) == n
+    assert len(prof.prefix_param_bytes) == n
+    # Prefix quantities are monotone; boundary 0 is the raw input.
+    assert prof.cum_flops == sorted(prof.cum_flops)
+    assert prof.prefix_param_bytes == sorted(prof.prefix_param_bytes)
+    assert prof.out_bytes[0] == prof.input_bytes
+    assert 0 < prof.freeze_index < n
+    assert prof.total_flops == prof.cum_flops[-1]
+
+
+def test_tiny_profile_memory_estimates_overestimate():
+    prof = tiny_profile()
+    for b in (1, prof.freeze_index, prof.n_boundaries - 1):
+        raw = prof.prefix_param_bytes[b] + 4 * prof.act_peak_bytes[b]
+        assert prof.memory_estimate(b, 4) >= raw   # headroom discipline
+    # Training the suffix costs strictly more (grads + optimizer) as long
+    # as any parameters remain past the boundary.
+    b = prof.freeze_index
+    assert prof.suffix_memory_estimate(b, 4, train=True) > \
+        prof.suffix_memory_estimate(b, 4, train=False)
