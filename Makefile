@@ -1,15 +1,17 @@
 # CI entry points. `make ci` is what a checkin must keep green.
 PY := PYTHONPATH=src python
 
-.PHONY: ci check tier1 fleet collect fast bench-fleet fleet-smoke
+.PHONY: ci check tier1 fleet network collect fast bench-fleet bench-network \
+        fleet-smoke
 
 # collect + the fast check tier first (fail fast on the most-churned
 # layers), then the full tier-1 run.
 ci: collect check tier1
 
-# The fast gate: fast test tier + a 2-server fleet_scaling smoke with
-# the determinism check (no BENCH_fleet.json written).
-check: fast fleet-smoke
+# The fast gate: fabric fast tests first (the most-churned subsystem),
+# then the fast test tier + a 2-server fleet_scaling smoke with the
+# determinism check (no BENCH_fleet.json written).
+check: network fast fleet-smoke
 
 # Fail fast on collection regressions (e.g. a hard import of an
 # uninstalled dependency aborting whole test modules).
@@ -25,6 +27,11 @@ tier1:
 fleet:
 	$(PY) -m pytest -x -q tests/test_fleet.py tests/test_api_cluster.py
 
+# Network-fabric tests only (single-flow byte-compat, max-min fair
+# sharing, contended determinism, split migration). Fast: no jit.
+network:
+	$(PY) -m pytest -x -q tests/test_network.py
+
 # Tier-1 without the slow calibration/e2e tests.
 fast:
 	$(PY) -m pytest -x -q -m "not slow"
@@ -38,3 +45,10 @@ fleet-smoke:
 # (the cross-PR perf trajectory record).
 bench-fleet:
 	$(PY) benchmarks/fleet_scaling.py --check-determinism
+
+# 1->8 tenants on one shared WAN trunk; exits non-zero unless per-tenant
+# throughput stays within 10% of fair share, contention migrates the
+# split toward the storage tier, and the contended event log reproduces.
+# Writes BENCH_network.json.
+bench-network:
+	$(PY) benchmarks/network_contention.py --check-determinism

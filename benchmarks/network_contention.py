@@ -1,0 +1,167 @@
+"""Network contention sweep: 1 -> 8 tenants sharing one WAN egress trunk
+(paper §7.7: split-point quality under tenant interference).
+
+    PYTHONPATH=src python benchmarks/network_contention.py
+        [--tenants 1,2,4,8] [--trunk-gbps 1.0] [--seed 0]
+        [--check-determinism] [--out BENCH_network.json]
+
+Every tenant fine-tunes the same workload through the
+:class:`repro.api.HapiCluster` facade with the flow-level network fabric
+(`.with_network`): activation pulls are flows under deterministic
+max-min fair sharing on the trunk, epochs are co-scheduled
+(least-advanced tenant steps first), and each client re-decides its
+split every 2 iterations from its measured-bandwidth EWMA. Reported per
+tenant count:
+
+* **fairness** — max deviation of per-tenant throughput from the fair
+  share (the mean); must stay within 10% for symmetric tenants,
+* **split migration** — final vs uncontended split index; under
+  contention at least one tenant must pick a *more pushdown* split
+  (larger index = more layers pushed into the storage tier = smaller
+  activations on the wire) than the uncontended run,
+* **wire bytes** — total bytes crossing the trunk (pushdown shrinks it).
+
+Results land in ``BENCH_network.json`` (``--out``) for the cross-PR
+trajectory. Same seed => byte-identical event log
+(``--check-determinism`` and tests/test_network.py assert it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from repro.api import HapiCluster, NetworkSpec, TenantSpec
+from repro.config import HapiConfig
+
+MODEL = "alexnet"
+TRAIN_BATCH = 500
+RESPLIT_EVERY = 2
+
+
+def run_contended(n_tenants: int, *, trunk_bw: float, seed: int = 0) -> Dict:
+    """One co-scheduled multi-tenant epoch on a shared trunk; returns
+    metrics + the full simulator event log (for determinism checks)."""
+    cluster = (HapiCluster(seed=seed)
+               .with_servers(4, n_accelerators=2, flops_per_accel=197e12)
+               .with_dataset("imagenet", n_samples=4000, object_size=500)
+               .with_network(NetworkSpec(trunk_bandwidth=trunk_bw)))
+    handles = [cluster.tenant(TenantSpec(
+        model=MODEL, hapi=HapiConfig(network_bandwidth=trunk_bw),
+        client_flops=197e12, resplit_every=RESPLIT_EVERY))
+        for _ in range(n_tenants)]
+    results = cluster.run_epochs(
+        [(h, "imagenet", TRAIN_BATCH) for h in handles])
+
+    tenants = []
+    for h, r in zip(handles, results):
+        tenants.append({
+            "tenant": h.tenant_id,
+            "split_final": r.split,
+            "resplits": r.resplits,
+            "jct": r.execution_time,
+            "throughput": r.n_iterations * TRAIN_BATCH / r.execution_time,
+            "wire_bytes": r.total_wire_bytes,
+            "effective_bandwidth": h.client.observed_bw,
+        })
+    # The initial split is the nominal-bandwidth Alg. 1 choice — identical
+    # for every tenant of this symmetric workload.
+    split_initial = cluster.split_for(
+        MODEL, TRAIN_BATCH,
+        HapiConfig(network_bandwidth=trunk_bw)).split_index
+    for t in tenants:
+        t["split_initial"] = split_initial
+
+    thr = [t["throughput"] for t in tenants]
+    fair = sum(thr) / len(thr)
+    return {
+        "n_tenants": n_tenants,
+        "tenants": tenants,
+        "fair_share": fair,
+        "fairness_max_dev": max(abs(x - fair) / fair for x in thr),
+        "aggregate_throughput": sum(thr),
+        "total_wire_bytes": sum(t["wire_bytes"] for t in tenants),
+        "event_log": cluster.event_digest(),
+    }
+
+
+def sweep(tenants: List[int], *, trunk_bw: float, seed: int) -> List[Dict]:
+    rows = []
+    for n in tenants:
+        r = run_contended(n, trunk_bw=trunk_bw, seed=seed)
+        rows.append(r)
+        splits = sorted({t["split_final"] for t in r["tenants"]})
+        print(f"tenants={n}  agg={r['aggregate_throughput']:8.1f} samples/s  "
+              f"fair-dev={r['fairness_max_dev'] * 100:5.1f}%  "
+              f"splits {r['tenants'][0]['split_initial']}->{splits}  "
+              f"wire={r['total_wire_bytes'] / 1e6:7.0f} MB")
+    return rows
+
+
+def write_json(path: str, rows: List[Dict], *, seed: int, trunk_gbps: float,
+               fairness_ok: bool, more_pushdown: bool, determinism) -> None:
+    """BENCH_network.json: the contention-behavior trajectory record."""
+    payload = {
+        "benchmark": "network_contention",
+        "model": MODEL,
+        "train_batch": TRAIN_BATCH,
+        "resplit_every": RESPLIT_EVERY,
+        "seed": seed,
+        "trunk_gbps": trunk_gbps,
+        "fairness_ok": fairness_ok,          # every row within 10% of fair share
+        "more_pushdown_under_contention": more_pushdown,
+        "determinism": determinism,
+        "rows": [
+            {k: v for k, v in r.items() if k != "event_log"}
+            for r in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", default="1,2,4,8")
+    ap.add_argument("--trunk-gbps", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check-determinism", action="store_true")
+    ap.add_argument("--out", default="BENCH_network.json",
+                    help="machine-readable results path ('' disables)")
+    args = ap.parse_args(argv)
+    tenants = [int(s) for s in args.tenants.split(",")]
+    trunk_bw = args.trunk_gbps * 1e9 / 8
+
+    rows = sweep(tenants, trunk_bw=trunk_bw, seed=args.seed)
+
+    fairness_ok = all(r["fairness_max_dev"] <= 0.10 for r in rows)
+    print(f"per-tenant throughput within 10% of fair share: {fairness_ok}")
+    # Contention must migrate the split toward the storage tier (larger
+    # index = more pushdown) for at least one contended workload. The
+    # baseline is the nominal-bandwidth Alg. 1 choice (split_initial) —
+    # what an uncontended tenant keeps for the whole epoch.
+    contended = [t for r in rows if r["n_tenants"] > 1 for t in r["tenants"]]
+    more_pushdown = (
+        any(t["split_final"] > t["split_initial"] for t in contended)
+        if contended else None               # nothing contended to judge
+    )
+    base_split = rows[0]["tenants"][0]["split_initial"]
+    print(f"contended split more pushdown than uncontended "
+          f"({base_split}): {more_pushdown}")
+    same = None
+    if args.check_determinism:
+        again = run_contended(tenants[-1], trunk_bw=trunk_bw, seed=args.seed)
+        same = again["event_log"] == rows[-1]["event_log"]
+        print(f"determinism (seed {args.seed}): {same}")
+    if args.out:
+        write_json(args.out, rows, seed=args.seed, trunk_gbps=args.trunk_gbps,
+                   fairness_ok=fairness_ok, more_pushdown=more_pushdown,
+                   determinism=same)
+    ok = fairness_ok and more_pushdown is not False and same is not False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,6 +31,7 @@ from repro.api.policies import (
     ScalingPolicy,
     SloScaling,
 )
+from repro.cos.network import NetworkFabric, NetworkSpec
 
 _CLUSTER_EXPORTS = ("HapiCluster", "TenantSpec", "TenantHandle", "ClusterReport")
 
@@ -39,6 +40,7 @@ __all__ = list(_CLUSTER_EXPORTS) + [
     "PlacementPolicy", "RoundRobinPlacement", "DemandAwarePlacement",
     "ScalingPolicy", "QueueDepthScaling", "SloScaling",
     "ROUTING_POLICIES", "PLACEMENT_POLICIES", "SCALING_POLICIES",
+    "NetworkSpec", "NetworkFabric",
 ]
 
 

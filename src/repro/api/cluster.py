@@ -38,9 +38,11 @@ from repro.api.policies import (
 from repro.config import HapiConfig
 from repro.core.profiler import LayerProfile, profile_layered
 from repro.core.splitter import SplitDecision, choose_split
-from repro.cos.client import EpochResult, HapiClient
-from repro.cos.clock import Link, Simulator
+from repro.cos.client import EpochResult, EpochRun, HapiClient
+from repro.cos.clock import Simulator
 from repro.cos.fleet import AutoscalePolicy, HapiFleet, TenantStats
+from repro.cos.network import (NetworkFabric, NetworkSpec, run_concurrently,
+                               wan_link)
 from repro.cos.objectstore import ObjectStore, put_synthetic_dataset
 from repro.cos.server import PostRequest, PostResponse
 
@@ -69,6 +71,10 @@ class TenantSpec:
     train_fn: Optional[Callable] = None
     push_training: bool = False           # ALL_IN_COS comparison mode
     n_classes: int = 1000                 # head size when profiling `model`
+    # Contention-aware split re-decision: every k iterations re-run
+    # Alg. 1 with the measured-bandwidth EWMA (0 = split fixed). Only
+    # meaningful on a cluster with a shared network fabric.
+    resplit_every: int = 0
 
 
 @dataclass
@@ -88,6 +94,13 @@ class TenantHandle:
                   max_iterations: Optional[int] = None) -> EpochResult:
         return self.client.run_epoch(dataset, train_batch, t0=t0,
                                      max_iterations=max_iterations)
+
+    def start_epoch(self, dataset: str, train_batch: int, *, t0: float = 0.0,
+                    max_iterations: Optional[int] = None) -> EpochRun:
+        """A steppable epoch, for co-scheduled contended runs (see
+        :meth:`HapiCluster.run_epochs`)."""
+        return self.client.start_epoch(dataset, train_batch, t0=t0,
+                                       max_iterations=max_iterations)
 
     def stats(self) -> Optional[TenantStats]:
         fleet = self.client.server
@@ -158,6 +171,8 @@ class HapiCluster:
         self._next_req = 1_000_000_000
         self._tenants: Dict[int, TenantHandle] = {}
         self._fleet: Optional[HapiFleet] = None
+        self._network: Optional[NetworkSpec] = None
+        self._fabric: Optional[NetworkFabric] = None
 
     # -- builder ---------------------------------------------------------------
     def _check_mutable(self, what: str) -> None:
@@ -184,6 +199,17 @@ class HapiCluster:
     def with_fair_queueing(self, enabled: bool) -> "HapiCluster":
         self._check_mutable("with_fair_queueing")
         self._fair_queueing = enabled
+        return self
+
+    def with_network(self, spec: Optional[NetworkSpec] = None,
+                     **kwargs) -> "HapiCluster":
+        """Put every tenant NIC and storage-node link on a shared
+        :class:`~repro.cos.network.NetworkFabric` (flow-level max-min
+        bandwidth sharing on the WAN egress trunk) instead of private
+        fixed-bandwidth links. ``kwargs`` build a
+        :class:`~repro.cos.network.NetworkSpec` when no spec is given."""
+        self._check_mutable("with_network")
+        self._network = spec if spec is not None else NetworkSpec(**kwargs)
         return self
 
     def with_routing(self, policy: RoutingPolicy) -> "HapiCluster":
@@ -262,6 +288,9 @@ class HapiCluster:
             scaling=self._scaling,
             **self._server_kwargs,
         )
+        if self._network is not None:
+            self._fabric = NetworkFabric(self._network, sim=sim)
+            store.use_fabric(self._fabric)
         for spec in self._datasets:
             self._put(spec)
         for key, fn in self._executors.items():
@@ -293,6 +322,13 @@ class HapiCluster:
     def store(self) -> ObjectStore:
         return self.fleet.store
 
+    @property
+    def fabric(self) -> Optional[NetworkFabric]:
+        """The shared network fabric, or None when tenants own private
+        links (no :meth:`with_network`)."""
+        self.build()
+        return self._fabric
+
     # -- model registry --------------------------------------------------------
     def profile(self, model_key: str, n_classes: int = 1000) -> LayerProfile:
         """Cached per-layer profile of one of the paper's vision models."""
@@ -319,8 +355,11 @@ class HapiCluster:
             tid = self._next_tenant
         self._next_tenant = max(self._next_tenant, tid) + 1
         prof = spec.profile or self.profile(spec.model, spec.n_classes)
-        link = Link(name=f"wan{tid}", bandwidth=spec.bandwidth) \
-            if spec.bandwidth is not None else None
+        # NIC rate: the tenant's own bandwidth, nominal otherwise; on a
+        # fabric cluster the link is a port on the shared trunk.
+        bw = spec.bandwidth if spec.bandwidth is not None \
+            else spec.hapi.network_bandwidth
+        link = wan_link(tid, bw, self._fabric)
         extra = {}
         if spec.client_hbm is not None:
             extra["client_hbm"] = spec.client_hbm
@@ -330,6 +369,7 @@ class HapiCluster:
             has_accelerator=spec.has_accelerator,
             straggler_factor=spec.straggler_factor,
             train_fn=spec.train_fn, push_training=spec.push_training,
+            resplit_every=spec.resplit_every,
             **extra,
         )
         handle = TenantHandle(spec=spec, client=client)
@@ -339,6 +379,22 @@ class HapiCluster:
     @property
     def tenants(self) -> Dict[int, TenantHandle]:
         return dict(self._tenants)
+
+    def run_epochs(self, jobs: List[Tuple[TenantHandle, str, int]], *,
+                   t0: float = 0.0,
+                   max_iterations: Optional[int] = None) -> List[EpochResult]:
+        """Run several tenants' epochs *concurrently* in virtual time:
+        each ``(handle, dataset, train_batch)`` job becomes a steppable
+        :class:`~repro.cos.client.EpochRun` and the least-advanced tenant
+        always steps next, so their transfers contend on the shared
+        fabric the way §7.7's testbed tenants do. Results are returned
+        in job order. (Sequential ``run_epoch`` calls would serialize
+        the epochs instead — fine for throughput accounting, but no
+        interference is expressible that way.)"""
+        self.build()
+        runs = [h.start_epoch(ds, tb, t0=t0, max_iterations=max_iterations)
+                for (h, ds, tb) in jobs]
+        return run_concurrently(runs)
 
     # -- benchmark-style raw workloads ----------------------------------------
     def submit_burst(self, dataset: str, model_key: str, *, tenant: int,

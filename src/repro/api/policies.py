@@ -223,13 +223,16 @@ class QueueDepthScaling:
         if self._cooldown > 0:
             self._cooldown -= 1
             return 0
-        alive = fleet.n_alive
+        # Capacity = routable replicas: cordoned ones are still draining
+        # but take no new work, so they must not dilute the depth signal
+        # (and scale-up may reclaim them, so they don't cap growth).
+        routable = fleet.n_routable
         waiting = fleet.waiting_posts()
-        depth = waiting / max(alive, 1)
-        if depth > self.scale_up_depth and alive < self.max_servers:
+        depth = waiting / max(routable, 1)
+        if depth > self.scale_up_depth and routable < self.max_servers:
             self._cooldown = self.cooldown_rounds
             return +1
-        if depth < self.scale_down_depth and alive > self.min_servers:
+        if depth < self.scale_down_depth and routable > self.min_servers:
             self._cooldown = self.cooldown_rounds
             return -1
         return 0
@@ -264,16 +267,16 @@ class SloScaling:
         if self._cooldown > 0:
             self._cooldown -= 1
             return 0
-        alive = fleet.n_alive
+        routable = fleet.n_routable         # draining replicas aren't capacity
         if self._delays:
             misses = sum(1 for d in self._delays if d > self.slo_delay)
             rate = misses / len(self._delays)
         else:
             rate = 0.0
-        if rate > self.up_miss_rate and alive < self.max_servers:
+        if rate > self.up_miss_rate and routable < self.max_servers:
             self._cooldown = self.cooldown_rounds
             return +1
-        if (rate == 0.0 and alive > self.min_servers
+        if (rate == 0.0 and routable > self.min_servers
                 and fleet.waiting_posts() == 0):
             self._cooldown = self.cooldown_rounds
             return -1

@@ -85,6 +85,24 @@ def fit_constants(
     return float(coef[0]), float(coef[1])
 
 
+def effective_bandwidth(nominal: float, samples: Sequence[float] = (),
+                        alpha: float = 0.25) -> float:
+    """EWMA fold of observed per-transfer bandwidth samples into a prior
+    (usually the nominal link rate). Pure and deterministic; with no
+    samples the nominal rate is returned unchanged.
+
+    This is the estimator behind contention-aware split re-decision: the
+    clients feed it the achieved bandwidth of every activation pull over
+    the shared fabric, and re-run Algorithm 1 / the §4 cost model with
+    the result instead of the provisioned rate."""
+    if not 0.0 < alpha <= 1.0:
+        raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+    bw = float(nominal)
+    for s in samples:
+        bw = alpha * float(s) + (1.0 - alpha) * bw
+    return bw
+
+
 def roofline_epoch_time(
     profile: LayerProfile,
     split: int,
@@ -99,9 +117,13 @@ def roofline_epoch_time(
     cos_hbm_bw: float = HW.hbm_bandwidth,
     client_hbm_bw: float = HW.hbm_bandwidth,
     overlap: bool = True,
+    measured_bandwidth: Optional[float] = None,
 ) -> EpochTime:
     """Roofline-corrected §4 model. FLOP counts come from the profile;
-    the COS serves ``n_tenants`` concurrent jobs (spatial sharing)."""
+    the COS serves ``n_tenants`` concurrent jobs (spatial sharing).
+    ``measured_bandwidth`` (e.g. an :func:`effective_bandwidth` estimate
+    from live transfers) replaces the nominal ``bandwidth`` in the
+    network term — the contention-aware form of the model."""
     prefix_flops = profile.cum_flops[split]
     suffix_fwd = profile.total_flops - prefix_flops
     # Training suffix: fwd + bwd ~ 3x fwd on trainable part.
@@ -117,7 +139,8 @@ def roofline_epoch_time(
         suffix_flops / client_flops, cli_bytes / max(client_hbm_bw, 1.0) / max(train_batch, 1)
     )
     wire = profile.out_bytes[split] if split > 0 else profile.input_bytes
-    net = wire * compress * dataset / bandwidth
+    bw = measured_bandwidth if measured_bandwidth else bandwidth
+    net = wire * compress * dataset / bw
     return EpochTime(cos, client, net, overlapped=overlap)
 
 

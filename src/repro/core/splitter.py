@@ -92,9 +92,13 @@ def choose_split_cost_optimal(
     n_tenants: int = 1,
     dataset_size: Optional[int] = None,
     freeze_index: Optional[int] = None,
+    measured_bandwidth: Optional[float] = None,
 ) -> SplitDecision:
     """Beyond-paper: argmin of the roofline-corrected §4 cost model over all
-    boundaries (including 0 = no pushdown)."""
+    boundaries (including 0 = no pushdown). ``measured_bandwidth`` feeds
+    the model a live bandwidth estimate (see
+    :func:`repro.core.cost_model.effective_bandwidth`) instead of the
+    provisioned rate."""
     from repro.core.cost_model import roofline_epoch_time
 
     fz = profile.freeze_index if freeze_index is None else freeze_index
@@ -108,6 +112,7 @@ def choose_split_cost_optimal(
             bandwidth=hapi.network_bandwidth,
             cos_flops=cos_flops, client_flops=client_flops,
             n_tenants=n_tenants, compress=compress,
+            measured_bandwidth=measured_bandwidth,
         ).total
         if t < best_t - 1e-12:
             best_i, best_t = i, t

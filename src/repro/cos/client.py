@@ -12,17 +12,22 @@ locally, pipelining transfer of batch i+1 with compute of batch i
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, TYPE_CHECKING
 
 import numpy as np
 
 from repro.config import HW, HapiConfig
+from repro.core.cost_model import effective_bandwidth
 from repro.core.profiler import LayerProfile
 from repro.core.splitter import SplitDecision, choose_split
 from repro.cos.clock import Accelerator, EventLog, Link
 from repro.cos.objectstore import ObjectStore
 from repro.cos.server import HapiServer, PostRequest, PostResponse
+
+if TYPE_CHECKING:
+    from repro.cos.network import NetworkFabric
 
 
 @dataclass
@@ -44,6 +49,7 @@ class EpochResult:
     iterations: List[IterationStats]
     split: int
     oom: bool = False
+    resplits: int = 0                  # contention-aware split migrations
 
     @property
     def n_iterations(self) -> int:
@@ -69,9 +75,18 @@ class HapiClient:
 
     ``link=None`` creates the tenant's WAN link from
     ``hapi.network_bandwidth`` — the common case, and what
-    :meth:`repro.api.HapiCluster.tenant` relies on. Multi-tenant
-    deployments should be stood up through that facade rather than by
-    wiring clients to fleets by hand."""
+    :meth:`repro.api.HapiCluster.tenant` relies on. When a shared
+    :class:`~repro.cos.network.NetworkFabric` is given, the link is a
+    fabric port instead: transfers become flows that contend with other
+    tenants on the WAN egress trunk. Multi-tenant deployments should be
+    stood up through the facade rather than by wiring clients to fleets
+    by hand.
+
+    ``resplit_every=k`` closes the contention loop: every ``k``
+    iterations the client re-runs Algorithm 1 with the EWMA of its
+    measured transfer bandwidth (instead of the nominal rate), so the
+    split migrates toward the storage tier when the trunk saturates
+    (paper §7.7's bandwidth-sensitive split behavior)."""
 
     def __init__(
         self,
@@ -89,10 +104,15 @@ class HapiClient:
         train_fn: Optional[Callable] = None,   # live suffix training
         mxu_efficiency: float = 0.4,
         push_training: bool = False,           # ALL_IN_COS comparison mode
+        fabric: Optional["NetworkFabric"] = None,
+        resplit_every: int = 0,                # 0 = split fixed for the epoch
+        bw_ewma_alpha: float = 0.25,
     ) -> None:
         self.server = server
         if link is None:
-            link = Link(name=f"wan{tenant}", bandwidth=hapi.network_bandwidth)
+            from repro.cos.network import wan_link
+
+            link = wan_link(tenant, hapi.network_bandwidth, fabric)
         self.link = link
         self.profile = profile
         self.hapi = hapi
@@ -111,6 +131,16 @@ class HapiClient:
             self.link.attach(self.sim)
         self.log = EventLog()
         self._next_req = tenant * 1_000_000
+        self.resplit_every = resplit_every
+        self.bw_ewma_alpha = bw_ewma_alpha
+        self.observed_bw: Optional[float] = None  # EWMA of achieved bandwidth
+        if hasattr(self.link, "ewma_alpha"):
+            # Fabric port: one estimator. The fabric maintains the EWMA
+            # (same samples, path latency handled by the port) and the
+            # client adopts it after every pull, so
+            # fabric.effective_bandwidth(tenant) and client.observed_bw
+            # can never drift apart.
+            self.link.ewma_alpha = bw_ewma_alpha
         # Split once per application (paper: before start).
         self.decision: SplitDecision = choose_split(profile, hapi, train_batch=1)
 
@@ -118,7 +148,37 @@ class HapiClient:
         self.decision = choose_split(self.profile, self.hapi, train_batch)
         return self.decision
 
+    # -- contention-aware split re-decision ------------------------------------
+    def _observe_bandwidth(self, sample: float) -> None:
+        prior = sample if self.observed_bw is None else self.observed_bw
+        self.observed_bw = effective_bandwidth(prior, [sample],
+                                               alpha=self.bw_ewma_alpha)
+
+    def resplit(self, train_batch: int) -> SplitDecision:
+        """Re-run Algorithm 1 with the measured (EWMA) bandwidth in place
+        of the nominal rate — under trunk contention the threshold
+        ``C = bw * window`` shrinks and the winner migrates toward the
+        freeze index (more pushdown, smaller activations)."""
+        bw = self.observed_bw if self.observed_bw else self.hapi.network_bandwidth
+        hapi = dataclasses.replace(self.hapi, network_bandwidth=bw)
+        self.decision = choose_split(self.profile, hapi, train_batch)
+        return self.decision
+
     # ------------------------------------------------------------------
+    def start_epoch(
+        self,
+        dataset: str,
+        train_batch: int,
+        *,
+        t0: float = 0.0,
+        max_iterations: Optional[int] = None,
+    ) -> "EpochRun":
+        """The epoch as an explicitly-steppable run — what
+        :func:`repro.cos.network.run_concurrently` drives so contending
+        tenants' flows interleave in virtual-time order."""
+        return EpochRun(self, dataset, train_batch, t0=t0,
+                        max_iterations=max_iterations)
+
     def run_epoch(
         self,
         dataset: str,
@@ -127,45 +187,13 @@ class HapiClient:
         t0: float = 0.0,
         max_iterations: Optional[int] = None,
     ) -> EpochResult:
-        """One fine-tuning epoch over a dataset stored as COS objects."""
-        store = self.server.store
-        objects = store.object_names(dataset)
-        if self.push_training:
-            split = self.profile.n_boundaries - 1  # everything in the COS
-        else:
-            split = self.choose_split_for(train_batch).split_index
-        obj_size = store.objects[objects[0]].n_samples if objects else 0
-        posts_per_iter = max(1, train_batch // max(obj_size, 1))
-
-        iters: List[IterationStats] = []
-        t = t0
-        total_wire = 0.0
-        it = 0
-        oi = 0
-        while oi < len(objects):
-            group = objects[oi : oi + posts_per_iter]
-            oi += posts_per_iter
-            stats = self._run_iteration(it, t, group, split, train_batch)
-            if stats is None:
-                # Requests were rejected (cannot fit even alone) — the
-                # paper's OOM 'X': a non-adaptable job at this batch size
-                # simply cannot run in the COS.
-                return EpochResult(float("inf"), 0.0, 0.0, [], split=split,
-                                   oom=True)
-            iters.append(stats)
-            total_wire += stats.wire_bytes
-            t = stats.t_end
-            it += 1
-            if max_iterations and it >= max_iterations:
-                break
-
-        return EpochResult(
-            execution_time=t - t0,
-            transferred_per_iter=total_wire / max(len(iters), 1),
-            total_wire_bytes=total_wire,
-            iterations=iters,
-            split=split,
-        )
+        """One fine-tuning epoch over a dataset stored as COS objects
+        (``start_epoch`` driven to completion)."""
+        run = self.start_epoch(dataset, train_batch, t0=t0,
+                               max_iterations=max_iterations)
+        while not run.done:
+            run.step()
+        return run.result()
 
     def _run_iteration(self, it: int, t: float, group: List[str], split: int,
                        train_batch: int) -> Optional[IterationStats]:
@@ -215,12 +243,22 @@ class HapiClient:
         # preserves the learning trajectory — sorting by req_id would file
         # re-issued duplicates (+500_000) at the end.
 
-        # Pull activations over the bottleneck link.
+        # Pull activations over the bottleneck link. The achieved
+        # bandwidth (including any queueing behind other tenants' flows
+        # on a shared fabric trunk) feeds the EWMA the resplit loop uses.
         t_data = t
         wire = 0.0
         for d in done:
-            _, t_data = self.link.transfer(max(t_data, d.finished), d.act_bytes)
+            t_req = max(t_data, d.finished)
+            _, t_data = self.link.transfer(t_req, d.act_bytes)
             wire += d.act_bytes
+            port_bw = getattr(self.link, "observed_bw", None)
+            if port_bw is not None:
+                self.observed_bw = port_bw      # fabric-maintained EWMA
+            else:
+                dt = t_data - t_req - self.link.latency
+                if d.act_bytes > 0 and dt > 0:
+                    self._observe_bandwidth(d.act_bytes / dt)
 
         # Training phase at the training batch size (suffix fwd+bwd).
         prof = self.profile
@@ -239,17 +277,123 @@ class HapiClient:
                               served_by_server=by_server)
 
 
+class EpochRun:
+    """One tenant's fine-tuning epoch as a steppable iteration sequence.
+
+    ``HapiClient.run_epoch`` is exactly this driven to completion, so
+    the uncontended path is unchanged; contended scenarios hand several
+    runs to :func:`repro.cos.network.run_concurrently`, which steps the
+    least-advanced tenant first so their flows interleave on the shared
+    fabric in virtual-time order. When the owning client has
+    ``resplit_every`` set, the split is re-decided between iterations
+    from the measured-bandwidth EWMA (and every migration is recorded as
+    a ``resplit`` event in the shared trace)."""
+
+    def __init__(self, client: "HapiClient", dataset: str, train_batch: int,
+                 *, t0: float = 0.0,
+                 max_iterations: Optional[int] = None) -> None:
+        self.client = client
+        self.dataset = dataset
+        self.train_batch = train_batch
+        store = client.server.store
+        self._objects = store.object_names(dataset)
+        if client.push_training:
+            self.split = client.profile.n_boundaries - 1  # all in the COS
+        else:
+            self.split = client.choose_split_for(train_batch).split_index
+        obj_size = store.objects[self._objects[0]].n_samples \
+            if self._objects else 0
+        self._per_iter = max(1, train_batch // max(obj_size, 1))
+        self.t0 = t0
+        self.t = t0                     # next iteration's start time
+        self.max_iterations = max_iterations
+        self.iterations: List[IterationStats] = []
+        self.total_wire = 0.0
+        self.oom = False
+        self.resplits = 0
+        self._oi = 0
+        self._it = 0
+
+    @property
+    def done(self) -> bool:
+        if self.oom or self._oi >= len(self._objects):
+            return True
+        return bool(self.max_iterations) and self._it >= self.max_iterations
+
+    def step(self) -> Optional[IterationStats]:
+        """Run the next iteration; returns its stats (None when the run
+        is complete or the iteration OOMed)."""
+        if self.done:
+            return None
+        c = self.client
+        if (c.resplit_every and not c.push_training and self._it
+                and self._it % c.resplit_every == 0):
+            old = self.split
+            new = c.resplit(self.train_batch).split_index
+            if new != old:
+                self.split = new
+                self.resplits += 1
+                if c.sim is not None:
+                    c.sim.record(self.t, "resplit",
+                                 f"t{c.tenant} it={self._it} {old}->{new} "
+                                 f"bw={c.observed_bw:.3e}")
+        group = self._objects[self._oi:self._oi + self._per_iter]
+        self._oi += self._per_iter
+        stats = c._run_iteration(self._it, self.t, group, self.split,
+                                 self.train_batch)
+        if stats is None:
+            # Requests were rejected (cannot fit even alone) — the
+            # paper's OOM 'X': a non-adaptable job at this batch size
+            # simply cannot run in the COS.
+            self.oom = True
+            return None
+        self.iterations.append(stats)
+        self.total_wire += stats.wire_bytes
+        self.t = stats.t_end
+        self._it += 1
+        return stats
+
+    def result(self) -> EpochResult:
+        if self.oom:
+            return EpochResult(float("inf"), 0.0, 0.0, [], split=self.split,
+                               oom=True)
+        return EpochResult(
+            execution_time=self.t - self.t0,
+            transferred_per_iter=self.total_wire / max(len(self.iterations), 1),
+            total_wire_bytes=self.total_wire,
+            iterations=list(self.iterations),
+            split=self.split,
+            resplits=self.resplits,
+        )
+
+
 class BaselineClient:
     """Status quo: stream raw objects, run the whole DNN client-side,
-    overlapping next-batch transfer with current-batch compute."""
+    overlapping next-batch transfer with current-batch compute.
 
-    def __init__(self, store: ObjectStore, link: Link, profile: LayerProfile,
+    Link handling matches :class:`HapiClient`: ``link`` is optional
+    (``None`` self-constructs a private WAN link at ``bandwidth``, or a
+    fabric port when a shared :class:`~repro.cos.network.NetworkFabric`
+    is given), so baseline runs can contend on the same trunk."""
+
+    def __init__(self, store: ObjectStore, link: Optional[Link],
+                 profile: LayerProfile,
                  *, client_flops: float = HW.peak_flops_bf16,
                  client_hbm: float = HW.hbm_capacity,
                  has_accelerator: bool = True,
-                 mxu_efficiency: float = 0.4) -> None:
+                 mxu_efficiency: float = 0.4,
+                 tenant: int = 0,
+                 bandwidth: Optional[float] = None,
+                 fabric: Optional["NetworkFabric"] = None) -> None:
         self.store = store
+        if link is None:
+            from repro.cos.network import wan_link
+
+            bw = bandwidth if bandwidth is not None \
+                else HapiConfig().network_bandwidth
+            link = wan_link(tenant, bw, fabric, name=f"wan{tenant}-base")
         self.link = link
+        self.tenant = tenant
         self.profile = profile
         eff = client_flops if has_accelerator else client_flops / 40.0
         self.accel = Accelerator(name="client-base", flops=eff, hbm=client_hbm)

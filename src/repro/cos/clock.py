@@ -122,6 +122,15 @@ class Timeline:
             self.sim.record(s, "busy", f"{self.name} {duration:.3e}")
         return s, e
 
+    def note(self, start: float, end: float) -> None:
+        """Account an interval scheduled by an external scheduler (the
+        network fabric computes contended transfer schedules itself and
+        only reports the outcome back onto the timeline)."""
+        self.busy_until = max(self.busy_until, end)
+        self.busy_time += end - start
+        if self.sim is not None:
+            self.sim.record(start, "busy", f"{self.name} {end - start:.3e}")
+
 
 @dataclass
 class Link(Timeline):

@@ -18,6 +18,10 @@ with:
   each in-flight request; when a replica dies its queue is lost
   (stateless crash) and the fleet re-issues the lost requests to the
   survivors, exactly the client re-issue the paper relies on;
+* **cordon-and-drain scale-down** — a retiring replica is first
+  *cordoned* (routing stops sending it work) and keeps serving its
+  queue; it is killed only once drained, so consolidation never
+  forces re-issues (ROADMAP: scale-down draining);
 * **pluggable autoscaling** — growth/shrink decisions are a
   :class:`~repro.api.policies.ScalingPolicy` (queue-depth hysteresis by
   default, SLO-miss-aware as an alternative);
@@ -135,6 +139,7 @@ class HapiFleet:
             for i in range(n_servers)
         ]
         self.fair_queueing = fair_queueing
+        self.cordoned: set = set()                   # server ids draining out
         # Per-tenant FIFO queues, dispatched round-robin by tenant id.
         self._pending: Dict[int, Deque[PostRequest]] = {}
         self._inflight: Dict[int, int] = {}          # req_id -> server index
@@ -149,9 +154,24 @@ class HapiFleet:
     def _alive(self) -> List[HapiServer]:
         return [s for s in self.servers if s.alive]
 
+    def _routable(self) -> List[HapiServer]:
+        """Replicas new work may be routed to: alive and not cordoned.
+        Falls back to all alive replicas if everything is cordoned (work
+        must land somewhere; the cordon is advisory, not a crash)."""
+        r = [s for s in self.servers if s.alive
+             and s.server_id not in self.cordoned]
+        return r or self._alive()
+
     @property
     def n_alive(self) -> int:
         return len(self._alive())
+
+    @property
+    def n_routable(self) -> int:
+        """Replicas actually accepting new work — the capacity signal
+        scaling policies must use (cordoned replicas still drain their
+        queues but contribute nothing to future throughput)."""
+        return len(self._routable())
 
     @property
     def alive(self) -> bool:
@@ -187,6 +207,7 @@ class HapiFleet:
         restart of the same replica before the next drain cannot strand
         them."""
         self.servers[server_id].kill()
+        self.cordoned.discard(server_id)
         self.sim.record(self._vtime, "kill", f"s{server_id}")
         self._reissue_lost()
 
@@ -195,9 +216,17 @@ class HapiFleet:
         self.sim.record(self._vtime, "restart", f"s{server_id}")
 
     def add_server(self) -> HapiServer:
-        """Scale up: revive a dead replica if any, else spawn a fresh one
-        (stateless servers make both identical). New replicas inherit the
-        fleet-wide executor registry."""
+        """Scale up: un-cordon a draining replica if any (the cheapest
+        capacity — it is still alive), else revive a dead replica, else
+        spawn a fresh one (stateless servers make both identical). New
+        replicas inherit the fleet-wide executor registry."""
+        for sid in sorted(self.cordoned):
+            s = self.servers[sid]
+            if s.alive:
+                self.cordoned.discard(sid)
+                self.sim.record(self._vtime, "scale-up", f"s{sid} uncordon")
+                return s
+            self.cordoned.discard(sid)       # stale entry: replica died
         for s in self.servers:
             if not s.alive:
                 s.restart()
@@ -212,16 +241,38 @@ class HapiFleet:
         return s
 
     def remove_server(self) -> Optional[HapiServer]:
-        """Scale down: retire the idle replica with the highest id (its
-        queue must be empty — stateless, nothing to migrate)."""
+        """Scale down by cordon-and-drain: pick the routable replica with
+        the shallowest queue (highest id on ties), stop routing to it and
+        let it serve out its queue; :meth:`_retire_drained` kills it once
+        empty. An already-idle victim therefore retires immediately —
+        the historical behavior — while a busy one drains first instead
+        of being refused (ROADMAP: scale-down draining)."""
         floor = self.scaling.min_servers if self.scaling else 1
-        idle = [s for s in self._alive() if not s.queue]
-        if len(self._alive()) <= floor or not idle:
+        cands = [s for s in self._alive() if s.server_id not in self.cordoned]
+        if len(cands) <= floor:
             return None
-        victim = max(idle, key=lambda s: s.server_id)
-        victim.kill()
-        self.sim.record(self._vtime, "scale-down", f"s{victim.server_id}")
+        victim = min(cands, key=lambda s: (s.queue_depth(), -s.server_id))
+        self.cordoned.add(victim.server_id)
+        self.sim.record(self._vtime, "cordon", f"s{victim.server_id}")
+        self._retire_drained()
         return victim
+
+    def _retire_drained(self) -> int:
+        """Kill cordoned replicas whose queues have fully drained (no
+        queued and no in-flight requests); returns #retired."""
+        retired = 0
+        for sid in sorted(self.cordoned):
+            s = self.servers[sid]
+            if not s.alive:
+                self.cordoned.discard(sid)   # died some other way
+                continue
+            if s.queue or any(si == sid for si in self._inflight.values()):
+                continue
+            s.kill()
+            self.cordoned.discard(sid)
+            self.sim.record(self._vtime, "scale-down", f"s{sid}")
+            retired += 1
+        return retired
 
     # -- intake + routing ------------------------------------------------------
     def submit(self, req: PostRequest) -> None:
@@ -255,7 +306,7 @@ class HapiFleet:
         return n
 
     def _dispatch_one(self, req: PostRequest) -> int:
-        alive = self._alive()
+        alive = self._routable()
         if not alive:
             raise ConnectionError("hapi fleet down")
         server = self.routing.route(self, req, alive)
@@ -281,7 +332,7 @@ class HapiFleet:
         replicas back into the pending queues so dispatch re-routes it
         across the grown fleet. Stateless servers make this free — a
         queued request has no server-side footprint yet."""
-        alive = self._alive()
+        alive = self._routable()
         if len(alive) < 2:
             return
         total = sum(s.queue_depth() for s in alive)
@@ -342,6 +393,7 @@ class HapiFleet:
                 raise ConnectionError("hapi fleet down")
             self.dispatch()
             self._autoscale_step()
+            self._retire_drained()     # cordoned replicas that ran dry
             self._re_replicate()       # placement tick: demand-aware
             active = [s for s in self._alive() if s.queue]
             if not active:
@@ -366,6 +418,7 @@ class HapiFleet:
         # Controller tick on the now-idle fleet (lets scale-down happen
         # between traffic bursts, not only under load).
         self._autoscale_step()
+        self._retire_drained()
         return responses
 
     def _account(self, resp: PostResponse) -> None:
@@ -392,4 +445,5 @@ class HapiFleet:
 
     def scale_events(self) -> List[Tuple[float, str, str]]:
         return [e for e in self.sim.log.events
-                if e[1] in ("scale-up", "scale-down", "kill", "restart")]
+                if e[1] in ("scale-up", "scale-down", "cordon",
+                            "kill", "restart")]

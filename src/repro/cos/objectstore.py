@@ -56,6 +56,23 @@ class ObjectStore:
             node.attach(sim)
         return self
 
+    def use_fabric(self, fabric) -> "ObjectStore":
+        """Route storage-node reads through a shared
+        :class:`~repro.cos.network.NetworkFabric`: each node becomes a
+        fabric port (sharing the storage ingress trunk when the fabric's
+        spec defines one). Uncontended reads stay byte-identical to the
+        private-Link model, so a fabric-backed store reproduces the
+        historical event log exactly until flows actually collide."""
+        self.nodes = [
+            fabric.storage_port(i, bandwidth=node.bandwidth,
+                                latency=node.latency)
+            for i, node in enumerate(self.nodes)
+        ]
+        if self.sim is not None:
+            for node in self.nodes:
+                node.attach(self.sim)
+        return self
+
     # -- data management ------------------------------------------------------
     def put_dataset(self, name: str, columns: Dict[str, np.ndarray],
                     object_size: int = 1000) -> List[str]:

@@ -14,6 +14,14 @@ the :class:`repro.api.HapiCluster` facade (autoscaling up to
 ``--placement``, ``--scaling``) and serves a multi-tenant
 feature-extraction workload, printing per-replica and per-tenant
 throughput.
+
+``--network-trunk GBPS`` additionally puts every tenant on a shared WAN
+egress trunk (the flow-level fabric of :mod:`repro.cos.network`) and
+runs co-scheduled tenant epochs with contention-aware split re-decision,
+printing each tenant's final split and measured-bandwidth EWMA:
+
+    PYTHONPATH=src python -m repro.launch.serve --cos-fleet 4 --tenants 4 \\
+        --network-trunk 1.0
 """
 from __future__ import annotations
 
@@ -119,6 +127,54 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
     }
 
 
+def serve_cos_contended(n_servers: int, *, n_tenants: int = 4, seed: int = 0,
+                        trunk_gbps: float = 1.0, train_batch: int = 500,
+                        resplit_every: int = 2, max_servers: int = 8,
+                        autoscale: bool = True,
+                        routing: str = "replica-aware",
+                        placement: str = "round-robin",
+                        scaling: str = "queue-depth"):
+    """Co-scheduled tenant epochs on a shared WAN egress trunk: every
+    tenant's activation pulls are flows contending under max-min fair
+    sharing, and each client re-decides its split from the measured
+    bandwidth EWMA (``resplit_every`` iterations). Fleet policies are
+    selected by registry name, exactly like :func:`serve_cos_fleet`."""
+    from repro.api import (HapiCluster, NetworkSpec, PLACEMENT_POLICIES,
+                           ROUTING_POLICIES, SCALING_POLICIES, TenantSpec)
+    from repro.config import HapiConfig
+
+    bw = trunk_gbps * 1e9 / 8
+    cluster = (HapiCluster(seed=seed)
+               .with_servers(n_servers, n_accelerators=2,
+                             flops_per_accel=197e12)
+               .with_dataset("serve", n_samples=4000, object_size=500,
+                             content_seed=seed)
+               .with_network(NetworkSpec(trunk_bandwidth=bw))
+               .with_routing(ROUTING_POLICIES[routing]())
+               .with_placement(PLACEMENT_POLICIES[placement]()))
+    if autoscale:
+        cluster.with_scaling(SCALING_POLICIES[scaling](
+            min_servers=1, max_servers=max_servers))
+    handles = [cluster.tenant(TenantSpec(
+        model="alexnet", hapi=HapiConfig(network_bandwidth=bw),
+        client_flops=197e12, resplit_every=resplit_every))
+        for _ in range(n_tenants)]
+    results = cluster.run_epochs([(h, "serve", train_batch) for h in handles])
+    tenants = []
+    for h, r in zip(handles, results):
+        ewma = h.client.observed_bw
+        tenants.append({
+            "tenant": h.tenant_id,
+            "split": r.split,
+            "resplits": r.resplits,
+            "jct": r.execution_time,
+            "throughput": r.n_iterations * train_batch / r.execution_time,
+            "effective_bandwidth": ewma,
+        })
+    return {"trunk_gbps": trunk_gbps, "tenants": tenants,
+            "report": cluster.report()}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -131,6 +187,10 @@ def main(argv=None):
     ap.add_argument("--tenants", type=int, default=3)
     ap.add_argument("--max-servers", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--network-trunk", type=float, default=0.0, metavar="GBPS",
+                    help="share one WAN egress trunk of GBPS across all "
+                         "tenants (contention-aware split re-decision)")
+    ap.add_argument("--resplit-every", type=int, default=2)
     from repro.api import (PLACEMENT_POLICIES, ROUTING_POLICIES,
                            SCALING_POLICIES)
 
@@ -141,6 +201,24 @@ def main(argv=None):
     ap.add_argument("--scaling", default="queue-depth",
                     choices=sorted(SCALING_POLICIES))
     args = ap.parse_args(argv)
+    if args.cos_fleet and args.network_trunk > 0:
+        out = serve_cos_contended(args.cos_fleet, n_tenants=args.tenants,
+                                  seed=args.seed,
+                                  trunk_gbps=args.network_trunk,
+                                  resplit_every=args.resplit_every,
+                                  max_servers=args.max_servers,
+                                  routing=args.routing,
+                                  placement=args.placement,
+                                  scaling=args.scaling)
+        print(f"shared trunk {args.network_trunk:.2f} Gbps, "
+              f"{len(out['tenants'])} tenants:")
+        for t in out["tenants"]:
+            bw = t["effective_bandwidth"]
+            print(f"tenant {t['tenant']}: split={t['split']:2d} "
+                  f"(resplits={t['resplits']}) jct={t['jct']:6.2f}s "
+                  f"{t['throughput']:8.1f} samples/s "
+                  f"ewma={bw / 1e6 if bw else 0:6.1f} MB/s")
+        return
     if args.cos_fleet:
         out = serve_cos_fleet(args.cos_fleet, n_tenants=args.tenants,
                               seed=args.seed, max_servers=args.max_servers,

@@ -1,9 +1,11 @@
-"""Cost model (Eqs. 1-3) sanity and fit."""
+"""Cost model (Eqs. 1-3) sanity, fit, and measured-bandwidth form."""
 import numpy as np
+import pytest
 
 from repro.core.cost_model import (
     EpochTime,
     PaperConstants,
+    effective_bandwidth,
     fit_constants,
     paper_epoch_time,
     roofline_epoch_time,
@@ -60,3 +62,25 @@ def test_transferred_per_iteration_compression():
     full = transferred_per_iteration(prof, 2, 100)
     comp = transferred_per_iteration(prof, 2, 100, compress=0.53)
     assert comp < full
+
+
+def test_effective_bandwidth_is_pure_ewma():
+    assert effective_bandwidth(100.0) == 100.0          # no samples: nominal
+    assert effective_bandwidth(100.0, [50.0], alpha=0.5) == 75.0
+    assert effective_bandwidth(100.0, [50.0, 50.0], alpha=0.5) == 62.5
+    # Converges onto a steady observed rate regardless of the prior.
+    bw = effective_bandwidth(125e6, [50e6] * 40, alpha=0.25)
+    assert bw == pytest.approx(50e6, rel=1e-3)
+    with pytest.raises(ValueError):
+        effective_bandwidth(1.0, [], alpha=0.0)
+
+
+def test_roofline_measured_bandwidth_scales_network_term_only():
+    prof = tiny_profile()
+    kw = dict(bandwidth=1e8, cos_flops=1e14, client_flops=1e14)
+    base = roofline_epoch_time(prof, 2, 1000, 100, **kw)
+    meas = roofline_epoch_time(prof, 2, 1000, 100,
+                               measured_bandwidth=5e7, **kw)
+    assert meas.network == pytest.approx(2 * base.network)
+    assert meas.cos == base.cos
+    assert meas.client == base.client

@@ -198,6 +198,58 @@ def test_autoscaler_adds_and_removes_servers(prof):
     assert fleet.n_alive >= policy.min_servers
 
 
+def test_scale_down_cordons_and_drains(prof):
+    """Scale-down no longer refuses busy replicas: the victim is
+    cordoned (routing excludes it), serves out its queue, and is retired
+    once drained — nothing is re-issued or lost."""
+    store = make_store(n=8000)
+    fleet = HapiFleet(store, n_servers=2, seed=0)
+    objects = store.object_names("ds")
+    n = burst(fleet, prof, objects, tenants=(0, 1))
+    fleet.dispatch()
+    victim = fleet.remove_server()
+    assert victim is not None
+    assert victim.alive                     # cordoned, not killed
+    assert victim.server_id in fleet.cordoned
+    assert victim.queue                     # still holds queued work
+
+    # New traffic routes around the cordoned replica.
+    before = len(victim.queue)
+    n2 = burst(fleet, prof, objects[:3], tenants=(0,), rid0=70_000)
+    fleet.dispatch()
+    assert len(victim.queue) == before
+
+    responses = fleet.drain()
+    assert len(responses) == n + n2         # drained, nothing lost
+    assert fleet.reissued == 0              # draining != crashing
+    assert not victim.alive                 # retired once empty
+    assert victim.server_id not in fleet.cordoned
+    kinds = [e[1] for e in fleet.scale_events()]
+    assert "cordon" in kinds and "scale-down" in kinds
+
+
+def test_scale_up_uncordons_draining_replica(prof):
+    """A cordoned replica is the cheapest capacity: scale-up reclaims it
+    instead of spawning a new one."""
+    store = make_store(n=2000)
+    fleet = HapiFleet(store, n_servers=2, seed=0)
+    burst(fleet, prof, store.object_names("ds"), tenants=(0,))
+    fleet.dispatch()
+    victim = fleet.remove_server()
+    assert victim is not None and victim.server_id in fleet.cordoned
+    s = fleet.add_server()
+    assert s.server_id == victim.server_id
+    assert not fleet.cordoned
+    assert len(fleet.servers) == 2          # no new replica was spawned
+
+
+def test_scale_down_respects_min_servers_floor(prof):
+    store = make_store(n=1000)
+    fleet = HapiFleet(store, n_servers=2, seed=0)
+    assert fleet.remove_server() is not None
+    assert fleet.remove_server() is None    # floor of 1 routable replica
+
+
 def test_fleet_beats_single_server_on_burst(prof):
     """The scaling claim at test granularity: 4 replicas finish a 3-tenant
     burst strictly faster than 1 (the benchmark sweeps this 1->8). The

@@ -1,0 +1,233 @@
+"""Shared-bandwidth network fabric tests: single-flow byte-compat with
+the private-Link model, max-min fair-share convergence, contended-run
+determinism, and contention-aware split migration (paper §7.7)."""
+import pytest
+
+from repro.api import HapiCluster, NetworkSpec, TenantSpec
+from repro.config import HapiConfig
+from repro.core.profiler import profile_layered
+from repro.cos.clock import Link, Simulator
+from repro.cos.network import NetworkFabric, run_concurrently
+from repro.models.vision import alexnet
+
+TRUNK = 1e9 / 8          # 1 Gbps, the paper's testbed rate
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return profile_layered(alexnet(100))
+
+
+# ---------------------------------------------------------------------------
+# Single-flow regression: the fabric must be invisible when uncontended
+# ---------------------------------------------------------------------------
+def test_single_flow_port_matches_link_byte_for_byte():
+    """A fabric port with the trunk to itself reproduces Link.transfer
+    exactly: same (start, end) floats, same recorded trace events."""
+    sim_a = Simulator(0)
+    link = Link(name="wan0", bandwidth=125e6).attach(sim_a)
+    sim_b = Simulator(0)
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=125e6), sim=sim_b)
+    port = fabric.tenant_port(0, bandwidth=125e6)
+
+    reqs = [(0.0, 5e6), (0.01, 3e7), (10.0, 1e5), (10.0, 2e6)]
+    for t, nbytes in reqs:
+        assert link.transfer(t, nbytes) == port.transfer(t, nbytes)
+    assert sim_a.log.digest() == sim_b.log.digest()
+    assert link.busy_until == port.busy_until
+    assert link.busy_time == port.busy_time
+
+
+def test_single_tenant_cluster_digest_unchanged_by_fabric(prof):
+    """A one-tenant deployment produces the identical event log with and
+    without the fabric (trunk = NIC rate): the pre-change digests are
+    reproduced exactly."""
+    def run(network: bool):
+        c = (HapiCluster(seed=3)
+             .with_servers(2, n_accelerators=2, flops_per_accel=65e12)
+             .with_dataset("ds", n_samples=2000, object_size=500,
+                           n_classes=100))
+        if network:
+            c.with_network(NetworkSpec(trunk_bandwidth=TRUNK))
+        t = c.tenant(TenantSpec(model="alexnet", profile=prof,
+                                hapi=HapiConfig(network_bandwidth=TRUNK),
+                                client_flops=65e12))
+        res = t.run_epoch("ds", train_batch=500)
+        return c.event_digest(), res
+
+    d_link, r_link = run(False)
+    d_fab, r_fab = run(True)
+    assert d_link == d_fab
+    assert r_link.execution_time == r_fab.execution_time
+    assert r_link.split == r_fab.split
+
+
+# ---------------------------------------------------------------------------
+# Max-min fair-share convergence
+# ---------------------------------------------------------------------------
+def test_two_equal_flows_converge_to_half_share():
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=100.0))
+    ports = [fabric.tenant_port(i, bandwidth=100.0, latency=0.0)
+             for i in range(2)]
+    out = fabric.transfer_concurrent([(p, 0.0, 1000.0) for p in ports])
+    for s, e in out:                       # 50 B/s each -> 20 s
+        assert s == 0.0
+        assert e == pytest.approx(20.0)
+
+
+def test_three_equal_flows_converge_to_third_share():
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=100.0))
+    ports = [fabric.tenant_port(i, bandwidth=100.0, latency=0.0)
+             for i in range(3)]
+    out = fabric.transfer_concurrent([(p, 0.0, 1000.0) for p in ports])
+    for _s, e in out:                      # 100/3 B/s each -> 30 s
+        assert e == pytest.approx(30.0)
+
+
+def test_max_min_respects_per_flow_caps():
+    """Water-filling: a NIC-capped flow is frozen at its cap and the
+    leftover goes to the unconstrained flow (20/80, not 50/50)."""
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=100.0))
+    slow = fabric.tenant_port(0, bandwidth=20.0, latency=0.0)
+    fast = fabric.tenant_port(1, bandwidth=100.0, latency=0.0)
+    out = fabric.transfer_concurrent([(slow, 0.0, 1000.0),
+                                      (fast, 0.0, 1000.0)])
+    assert out[1][1] == pytest.approx(12.5)   # 80 B/s until done
+    assert out[0][1] == pytest.approx(50.0)   # 20 B/s throughout
+
+
+def test_rates_recompute_at_flow_start_and_finish():
+    """A flow arriving mid-transfer halves both rates; the finisher's
+    capacity is handed back (classic fluid-flow trajectory)."""
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=100.0))
+    p0 = fabric.tenant_port(0, bandwidth=100.0, latency=0.0)
+    p1 = fabric.tenant_port(1, bandwidth=100.0, latency=0.0)
+    out = fabric.transfer_concurrent([(p0, 0.0, 2000.0), (p1, 10.0, 1000.0)])
+    # p0 solo for [0,10] (1000 B), then 50/50: both need 1000 B more ->
+    # both finish at t=30.
+    assert out[0][1] == pytest.approx(30.0)
+    assert out[1][1] == pytest.approx(30.0)
+
+
+def test_same_port_batch_flows_share_port_and_count_busy_once():
+    """Two flows batched onto one port share its rate (fluid semantics)
+    and busy_time counts the union of their windows, not the sum."""
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=100.0))
+    p = fabric.tenant_port(0, bandwidth=100.0, latency=0.0)
+    out = fabric.transfer_concurrent([(p, 0.0, 1000.0), (p, 0.0, 1000.0)])
+    for _s, e in out:                      # 50 B/s each on the port
+        assert e == pytest.approx(20.0)
+    assert p.busy_time == pytest.approx(20.0)   # union, not 40
+
+
+def test_port_created_after_pruning_cannot_rewrite_history():
+    """Trunk history gets pruned for speed, so a port created later
+    starts at the pruned horizon instead of overcommitting the past."""
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=100.0))
+    p0 = fabric.tenant_port(0, bandwidth=100.0, latency=0.0)
+    p0.transfer(0.0, 1000.0)               # commits [0,10] @ 100
+    p0.transfer(10.0, 1000.0)              # prune point: horizon >= 10
+    p1 = fabric.tenant_port(1, bandwidth=100.0, latency=0.0)
+    s1, e1 = p1.transfer(0.0, 1000.0)      # must not run inside [0,10]
+    assert s1 >= 10.0
+    assert e1 == pytest.approx(s1 + 10.0 + 10.0)   # behind p0's 2nd flow
+
+
+def test_synchronous_flows_respect_committed_profiles():
+    """The Link-compatible path: a second tenant's flow only gets the
+    trunk capacity not already committed to the first one."""
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=100.0))
+    p0 = fabric.tenant_port(0, bandwidth=100.0, latency=0.0)
+    p1 = fabric.tenant_port(1, bandwidth=100.0, latency=0.0)
+    s0, e0 = p0.transfer(0.0, 1000.0)
+    assert (s0, e0) == (0.0, pytest.approx(10.0))    # full rate, committed
+    s1, e1 = p1.transfer(0.0, 1000.0)
+    # blocked behind p0's committed window, then full rate
+    assert s1 == 0.0
+    assert e1 == pytest.approx(20.0)
+    assert fabric.effective_bandwidth(0) == pytest.approx(100.0)
+    assert fabric.effective_bandwidth(1) == pytest.approx(50.0)
+
+
+# ---------------------------------------------------------------------------
+# Contended scenarios through the facade
+# ---------------------------------------------------------------------------
+def contended_cluster(seed, n_tenants, prof, resplit_every=1):
+    c = (HapiCluster(seed=seed)
+         .with_servers(2, n_accelerators=2, flops_per_accel=197e12)
+         .with_dataset("ds", n_samples=2000, object_size=500, n_classes=100)
+         .with_network(NetworkSpec(trunk_bandwidth=TRUNK)))
+    handles = [c.tenant(TenantSpec(model="alexnet", profile=prof,
+                                   hapi=HapiConfig(network_bandwidth=TRUNK),
+                                   client_flops=197e12,
+                                   resplit_every=resplit_every))
+               for _ in range(n_tenants)]
+    return c, handles
+
+
+def test_contended_event_log_deterministic(prof):
+    def run():
+        c, handles = contended_cluster(11, 3, prof)
+        c.run_epochs([(h, "ds", 500) for h in handles])
+        return c.event_digest()
+
+    first, second = run(), run()
+    assert first == second
+    assert len(first) > 50                  # non-trivial contended trace
+
+
+def test_split_migrates_toward_storage_under_contention(prof):
+    """The §7.7 behavior: the EWMA of measured bandwidth collapses under
+    trunk contention and the re-decided split moves toward the freeze
+    index (more pushdown, smaller activations) vs the solo run."""
+    c_solo, h_solo = contended_cluster(0, 1, prof)
+    (solo,) = c_solo.run_epochs([(h_solo[0], "ds", 500)])
+    assert solo.resplits == 0               # alone, the estimate holds
+
+    c, handles = contended_cluster(0, 2, prof)
+    results = c.run_epochs([(h, "ds", 500) for h in handles])
+    assert any(r.resplits >= 1 for r in results)
+    assert any(r.split > solo.split for r in results)
+    assert any(e[1] == "resplit" for e in c.sim.log.events)
+    # The fabric exposes the measured bandwidth that drove the decision.
+    ewmas = [c.fabric.effective_bandwidth(h.tenant_id) for h in handles]
+    assert all(bw is not None for bw in ewmas)
+    assert min(ewmas) < TRUNK / 2           # contention was actually seen
+
+
+def test_contended_tenants_within_10pct_of_fair_share(prof):
+    """Symmetric tenants on one trunk end up within 10% of the fair
+    share (mean) epoch throughput."""
+    c, handles = contended_cluster(0, 4, prof)
+    results = c.run_epochs([(h, "ds", 500) for h in handles])
+    thr = [r.n_iterations * 500 / r.execution_time for r in results]
+    fair = sum(thr) / len(thr)
+    assert all(abs(t - fair) / fair < 0.10 for t in thr), thr
+
+
+def test_run_concurrently_steps_least_advanced_first():
+    """The co-scheduler is deterministic and returns results in input
+    order, regardless of which run finishes first."""
+    class FakeRun:
+        def __init__(self, name, steps):
+            self.name, self.t, self.steps = name, 0.0, steps
+            self.trace = []
+
+        @property
+        def done(self):
+            return not self.steps
+
+        def step(self):
+            self.t += self.steps.pop(0)
+            order.append(self.name)
+
+        def result(self):
+            return self.name
+
+    order = []
+    a = FakeRun("a", [5.0, 5.0])
+    b = FakeRun("b", [2.0, 2.0, 2.0])
+    assert run_concurrently([a, b]) == ["a", "b"]
+    # a steps first (tie at t=0, list order), then b catches up twice
+    # before a's t=5 is no longer the minimum, etc.
+    assert order == ["a", "b", "b", "b", "a"]
