@@ -27,8 +27,9 @@ tier1:
 fleet:
 	$(PY) -m pytest -x -q tests/test_fleet.py tests/test_api_cluster.py
 
-# Network-fabric tests only (single-flow byte-compat, max-min fair
-# sharing, contended determinism, split migration). Fast: no jit.
+# Network-fabric tests only (single-flow byte-compat, weighted max-min
+# fair sharing, QoS classes, storage batch window, fabric-aware
+# policies, contended determinism, split migration). Fast: no jit.
 network:
 	$(PY) -m pytest -x -q tests/test_network.py
 
@@ -47,8 +48,9 @@ bench-fleet:
 	$(PY) benchmarks/fleet_scaling.py --check-determinism
 
 # 1->8 tenants on one shared WAN trunk; exits non-zero unless per-tenant
-# throughput stays within 10% of fair share, contention migrates the
-# split toward the storage tier, and the contended event log reproduces.
-# Writes BENCH_network.json.
+# throughput stays within 10% of fair share, gold/bronze trunk shares
+# track the 1:1/2:1/4:1 service-class weights within 10%, contention
+# migrates the split toward the storage tier, and the contended event
+# log reproduces. Writes BENCH_network.json (incl. the weighted series).
 bench-network:
 	$(PY) benchmarks/network_contention.py --check-determinism

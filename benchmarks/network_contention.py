@@ -5,6 +5,12 @@
         [--tenants 1,2,4,8] [--trunk-gbps 1.0] [--seed 0]
         [--check-determinism] [--out BENCH_network.json]
 
+Besides the symmetric fairness sweep, a **gold/bronze QoS sweep**
+measures the trunk share two backlogged tenant flows achieve under
+weighted max-min sharing for weight pairs 1:1 / 2:1 / 4:1 — the share
+ratio over the contended window must match the weight ratio within 10%
+(the `weighted` series in BENCH_network.json).
+
 Every tenant fine-tunes the same workload through the
 :class:`repro.api.HapiCluster` facade with the flow-level network fabric
 (`.with_network`): activation pulls are flows under deterministic
@@ -33,10 +39,12 @@ from typing import Dict, List
 
 from repro.api import HapiCluster, NetworkSpec, TenantSpec
 from repro.config import HapiConfig
+from repro.cos.network import measure_trunk_shares
 
 MODEL = "alexnet"
 TRAIN_BATCH = 500
 RESPLIT_EVERY = 2
+WEIGHT_PAIRS = [(1.0, 1.0), (2.0, 1.0), (4.0, 1.0)]
 
 
 def run_contended(n_tenants: int, *, trunk_bw: float, seed: int = 0) -> Dict:
@@ -85,6 +93,35 @@ def run_contended(n_tenants: int, *, trunk_bw: float, seed: int = 0) -> Dict:
     }
 
 
+def run_weighted(weights, *, trunk_bw: float) -> Dict:
+    """Measured trunk shares of two backlogged tenant flows under
+    weighted max-min sharing (gold vs bronze service class; see
+    :func:`repro.cos.network.measure_trunk_shares` for the probe). The
+    measured share ratio must match the weight ratio within 10%."""
+    shares = measure_trunk_shares(weights, trunk_bw)
+    ratio = shares[0] / shares[1]
+    want = weights[0] / weights[1]
+    return {
+        "weights": list(weights),
+        "trunk_shares": shares,
+        "share_ratio": ratio,
+        "weight_ratio": want,
+        "ok": abs(ratio - want) / want <= 0.10,
+    }
+
+
+def weighted_sweep(*, trunk_bw: float) -> List[Dict]:
+    rows = []
+    for pair in WEIGHT_PAIRS:
+        r = run_weighted(pair, trunk_bw=trunk_bw)
+        rows.append(r)
+        print(f"weights {pair[0]:g}:{pair[1]:g}  trunk shares "
+              f"{r['trunk_shares'][0] / 1e6:6.1f}/{r['trunk_shares'][1] / 1e6:6.1f} MB/s  "
+              f"ratio={r['share_ratio']:.2f} (want {r['weight_ratio']:.2f})  "
+              f"ok={r['ok']}")
+    return rows
+
+
 def sweep(tenants: List[int], *, trunk_bw: float, seed: int) -> List[Dict]:
     rows = []
     for n in tenants:
@@ -99,7 +136,8 @@ def sweep(tenants: List[int], *, trunk_bw: float, seed: int) -> List[Dict]:
 
 
 def write_json(path: str, rows: List[Dict], *, seed: int, trunk_gbps: float,
-               fairness_ok: bool, more_pushdown: bool, determinism) -> None:
+               fairness_ok: bool, more_pushdown: bool, determinism,
+               weighted: List[Dict], weighted_ok: bool) -> None:
     """BENCH_network.json: the contention-behavior trajectory record."""
     payload = {
         "benchmark": "network_contention",
@@ -111,6 +149,8 @@ def write_json(path: str, rows: List[Dict], *, seed: int, trunk_gbps: float,
         "fairness_ok": fairness_ok,          # every row within 10% of fair share
         "more_pushdown_under_contention": more_pushdown,
         "determinism": determinism,
+        "weighted_ok": weighted_ok,          # QoS shares track weights <=10%
+        "weighted": weighted,                # gold/bronze trunk-share series
         "rows": [
             {k: v for k, v in r.items() if k != "event_log"}
             for r in rows
@@ -135,6 +175,10 @@ def main(argv=None) -> int:
     trunk_bw = args.trunk_gbps * 1e9 / 8
 
     rows = sweep(tenants, trunk_bw=trunk_bw, seed=args.seed)
+    weighted = weighted_sweep(trunk_bw=trunk_bw)
+    weighted_ok = all(r["ok"] for r in weighted)
+    print(f"weighted trunk shares track service class within 10%: "
+          f"{weighted_ok}")
 
     fairness_ok = all(r["fairness_max_dev"] <= 0.10 for r in rows)
     print(f"per-tenant throughput within 10% of fair share: {fairness_ok}")
@@ -158,8 +202,10 @@ def main(argv=None) -> int:
     if args.out:
         write_json(args.out, rows, seed=args.seed, trunk_gbps=args.trunk_gbps,
                    fairness_ok=fairness_ok, more_pushdown=more_pushdown,
-                   determinism=same)
-    ok = fairness_ok and more_pushdown is not False and same is not False
+                   determinism=same, weighted=weighted,
+                   weighted_ok=weighted_ok)
+    ok = (fairness_ok and weighted_ok and more_pushdown is not False
+          and same is not False)
     return 0 if ok else 1
 
 

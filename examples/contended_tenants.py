@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/contended_tenants.py [--tenants 4]
         [--trunk-gbps 1.0] [--resplit-every 2] [--seed 0]
+        [--weights 2,1]
 
 Every tenant's activation pulls are *flows* on the flow-level network
 fabric (`repro.cos.network`): NICs are private, the WAN egress trunk is
@@ -16,6 +17,12 @@ estimate collapses from the nominal rate to ~1/n of it and the split
 migrates toward the storage tier — smaller activations, less wire. The
 printout contrasts the contended run with an uncontended solo run of
 the same workload. Same seed => bit-reproducible output.
+
+`--weights 2,1` turns this into a **QoS scenario**: tenants get
+gold/bronze service classes (cycled over `--tenants`), contended fabric
+links are shared in weight proportion — a direct trunk probe shows the
+weighted split of the wire, and the co-scheduled epochs run with every
+storage-tier read batch weighted by its tenant's class.
 """
 import argparse
 
@@ -26,16 +33,31 @@ MODEL = "alexnet"
 TRAIN_BATCH = 500
 
 
-def build(seed: int, trunk_bw: float, n_tenants: int, resplit_every: int):
+def build(seed: int, trunk_bw: float, n_tenants: int, resplit_every: int,
+          weights=None):
+    weights = weights or [1.0]
     cluster = (HapiCluster(seed=seed)
                .with_servers(4, n_accelerators=2, flops_per_accel=197e12)
                .with_dataset("imagenet", n_samples=4000, object_size=500)
                .with_network(NetworkSpec(trunk_bandwidth=trunk_bw)))
     handles = [cluster.tenant(TenantSpec(
         model=MODEL, hapi=HapiConfig(network_bandwidth=trunk_bw),
-        client_flops=197e12, resplit_every=resplit_every))
-        for _ in range(n_tenants)]
+        client_flops=197e12, resplit_every=resplit_every,
+        network_weight=weights[i % len(weights)]))
+        for i in range(n_tenants)]
     return cluster, handles
+
+
+def probe_trunk_shares(trunk_bw: float, weights):
+    """Print the measured weighted trunk split of two backlogged
+    classes (see :func:`repro.cos.network.measure_trunk_shares`)."""
+    from repro.cos.network import measure_trunk_shares
+
+    shares = measure_trunk_shares(weights, trunk_bw)
+    for w, s in zip(weights, shares):
+        print(f"  class w={w:g}: {s / 1e6:7.1f} MB/s of the trunk "
+              f"({s / sum(shares) * 100:4.1f}%)")
+    return shares
 
 
 def main(argv=None):
@@ -44,8 +66,13 @@ def main(argv=None):
     ap.add_argument("--trunk-gbps", type=float, default=1.0)
     ap.add_argument("--resplit-every", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--weights", default="", metavar="W[,W...]",
+                    help="QoS service classes cycled over tenants "
+                         "(e.g. '2,1' = gold/bronze); empty = all 1.0")
     args = ap.parse_args(argv)
     trunk_bw = args.trunk_gbps * 1e9 / 8
+    weights = ([float(w) for w in args.weights.split(",")]
+               if args.weights else None)
 
     # Uncontended reference: one tenant owns the trunk end to end.
     cluster, handles = build(args.seed, trunk_bw, 1, args.resplit_every)
@@ -54,8 +81,13 @@ def main(argv=None):
           f"split={solo.split} jct={solo.execution_time:.2f}s "
           f"wire={solo.total_wire_bytes / 1e6:.0f} MB")
 
+    if weights and len(set(weights)) > 1:
+        print(f"\nweighted trunk split for classes "
+              f"{':'.join(f'{w:g}' for w in weights[:2])}:")
+        probe_trunk_shares(trunk_bw, weights[:2])
+
     cluster, handles = build(args.seed, trunk_bw, args.tenants,
-                             args.resplit_every)
+                             args.resplit_every, weights)
     results = cluster.run_epochs(
         [(h, "imagenet", TRAIN_BATCH) for h in handles])
     print(f"\n{args.tenants} tenants sharing the trunk:")
@@ -63,14 +95,15 @@ def main(argv=None):
     for h, r in zip(handles, results):
         bw = h.client.observed_bw or trunk_bw
         thr.append(r.n_iterations * TRAIN_BATCH / r.execution_time)
-        print(f"tenant {h.tenant_id}: split={solo.split}->{r.split:2d} "
+        print(f"tenant {h.tenant_id} (w={h.spec.network_weight:g}): "
+              f"split={solo.split}->{r.split:2d} "
               f"(resplits={r.resplits}) jct={r.execution_time:6.2f}s "
               f"wire={r.total_wire_bytes / 1e6:6.0f} MB "
               f"ewma={bw / 1e6:6.1f} MB/s {thr[-1]:7.1f} samples/s")
     fair = sum(thr) / len(thr)
     dev = max(abs(t - fair) / fair for t in thr)
     print(f"\nfair share {fair:.1f} samples/s, max deviation {dev * 100:.1f}% "
-          f"(max-min sharing on the trunk)")
+          f"(weighted max-min sharing on the trunk)")
     resplit_events = [e for e in cluster.sim.log.events if e[1] == "resplit"]
     for t, _k, d in resplit_events:
         print(f"  resplit t={t:7.3f}s {d}")

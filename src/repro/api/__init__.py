@@ -19,6 +19,8 @@ Nothing outside this package should assemble ``Simulator`` +
 """
 from repro.api.policies import (
     DemandAwarePlacement,
+    FabricAwareRouting,
+    FabricAwareScaling,
     LeastLoadedRouting,
     PLACEMENT_POLICIES,
     PlacementPolicy,
@@ -37,8 +39,9 @@ _CLUSTER_EXPORTS = ("HapiCluster", "TenantSpec", "TenantHandle", "ClusterReport"
 
 __all__ = list(_CLUSTER_EXPORTS) + [
     "RoutingPolicy", "ReplicaAwareRouting", "LeastLoadedRouting",
+    "FabricAwareRouting",
     "PlacementPolicy", "RoundRobinPlacement", "DemandAwarePlacement",
-    "ScalingPolicy", "QueueDepthScaling", "SloScaling",
+    "ScalingPolicy", "QueueDepthScaling", "SloScaling", "FabricAwareScaling",
     "ROUTING_POLICIES", "PLACEMENT_POLICIES", "SCALING_POLICIES",
     "NetworkSpec", "NetworkFabric",
 ]

@@ -75,6 +75,12 @@ class TenantSpec:
     # Alg. 1 with the measured-bandwidth EWMA (0 = split fixed). Only
     # meaningful on a cluster with a shared network fabric.
     resplit_every: int = 0
+    # Service class (QoS weight): this tenant's share of any contended
+    # fabric link is proportional to its weight (gold=2 gets twice a
+    # bronze=1 tenant's bandwidth under weighted max-min sharing, both
+    # on the WAN trunk and for its storage-tier reads). Only meaningful
+    # on a cluster with a shared network fabric.
+    network_weight: float = 1.0
 
 
 @dataclass
@@ -359,7 +365,7 @@ class HapiCluster:
         # fabric cluster the link is a port on the shared trunk.
         bw = spec.bandwidth if spec.bandwidth is not None \
             else spec.hapi.network_bandwidth
-        link = wan_link(tid, bw, self._fabric)
+        link = wan_link(tid, bw, self._fabric, weight=spec.network_weight)
         extra = {}
         if spec.client_hbm is not None:
             extra["client_hbm"] = spec.client_hbm
@@ -370,6 +376,7 @@ class HapiCluster:
             straggler_factor=spec.straggler_factor,
             train_fn=spec.train_fn, push_training=spec.push_training,
             resplit_every=spec.resplit_every,
+            network_weight=spec.network_weight,
             **extra,
         )
         handle = TenantHandle(spec=spec, client=client)
@@ -405,7 +412,8 @@ class HapiCluster:
                      b_max: Optional[int] = None,
                      adaptable: bool = True,
                      limit: Optional[int] = None,
-                     n_classes: int = 1000) -> List[int]:
+                     n_classes: int = 1000,
+                     network_weight: float = 1.0) -> List[int]:
         """Submit one POST per object of ``dataset`` (first ``limit`` of
         them if given) for ``tenant`` — the burst workload of the serving
         driver and the scaling benchmark. Arrival is a single seeded-RNG
@@ -427,7 +435,7 @@ class HapiCluster:
                 req_id=self._next_req, tenant=tenant, model_key=model_key,
                 split=split, object_name=oname, b_max=b_max, profile=prof,
                 arrival=arrival, compress=hapi.compress_transfer,
-                adaptable=adaptable,
+                adaptable=adaptable, network_weight=network_weight,
             )
             self._fleet.submit(req)
             ids.append(req.req_id)

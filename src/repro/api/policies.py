@@ -57,25 +57,29 @@ class ReplicaAwareRouting:
 
     name: str = "replica-aware"
 
-    def route(self, fleet: "HapiFleet", req: "PostRequest",
-              alive: List["HapiServer"]) -> "HapiServer":
+    def _candidates(self, fleet: "HapiFleet", req: "PostRequest",
+                    alive: List["HapiServer"]) -> List["HapiServer"]:
         n_nodes = len(fleet.store.nodes)
         replicas = set(fleet.store.replicas(req.object_name))
         colocated = [s for s in alive if s.server_id % n_nodes in replicas]
-        cands = colocated or alive
+        return colocated or alive
 
+    def _load(self, fleet: "HapiFleet", req: "PostRequest",
+              s: "HapiServer") -> tuple:
         # Least-loaded with tenant spreading: under fair queueing, prefer
         # the replica holding the fewest of this tenant's requests so every
         # replica's queue interleaves tenants (one tenant must not own a
         # whole replica while sharing the storage tier); then queue depth,
         # earliest accelerator availability, id.
-        def load(s: "HapiServer"):
-            tenant_here = (s.tenant_queue_depth(req.tenant)
-                           if fleet.fair_queueing else 0)
-            return (tenant_here, s.queue_depth(),
-                    min(a.busy_until for a in s.accels), s.server_id)
+        tenant_here = (s.tenant_queue_depth(req.tenant)
+                       if fleet.fair_queueing else 0)
+        return (tenant_here, s.queue_depth(),
+                min(a.busy_until for a in s.accels), s.server_id)
 
-        return min(cands, key=load)
+    def route(self, fleet: "HapiFleet", req: "PostRequest",
+              alive: List["HapiServer"]) -> "HapiServer":
+        return min(self._candidates(fleet, req, alive),
+                   key=lambda s: self._load(fleet, req, s))
 
 
 @dataclass
@@ -90,6 +94,26 @@ class LeastLoadedRouting:
               alive: List["HapiServer"]) -> "HapiServer":
         return min(alive, key=lambda s: (
             s.queue_depth(), min(a.busy_until for a in s.accels), s.server_id))
+
+
+@dataclass
+class FabricAwareRouting(ReplicaAwareRouting):
+    """Replica-aware routing that also watches the storage network
+    (ROADMAP: fold fabric state into routing): among the co-located
+    candidates, prefer replicas whose storage ingress link is *idle* at
+    the request's arrival — a replica behind a still-draining storage
+    link will wait on its reads no matter how shallow its queue is. The
+    ingress timeline exists on every deployment (fabric port or private
+    Link), so the policy works either way; it only differs from plain
+    replica-aware when some ingress actually has a backlog."""
+
+    name: str = "fabric-aware"
+
+    def _load(self, fleet: "HapiFleet", req: "PostRequest",
+              s: "HapiServer") -> tuple:
+        ingress = fleet.store.nodes[s.server_id % len(fleet.store.nodes)]
+        return (ingress.busy_until > req.arrival,) + \
+            super()._load(fleet, req, s)
 
 
 # ---------------------------------------------------------------------------
@@ -219,6 +243,13 @@ class QueueDepthScaling:
     def observe(self, resp: "PostResponse") -> None:
         pass
 
+    def _hold_scale_up(self, fleet: "HapiFleet") -> bool:
+        """Veto hook: a subclass may cancel a scale-up the depth signal
+        asked for (e.g. when some other resource is the bottleneck).
+        Holding does not consume the cooldown — the condition is
+        re-checked every tick."""
+        return False
+
     def decide(self, fleet: "HapiFleet") -> int:
         if self._cooldown > 0:
             self._cooldown -= 1
@@ -230,6 +261,8 @@ class QueueDepthScaling:
         waiting = fleet.waiting_posts()
         depth = waiting / max(routable, 1)
         if depth > self.scale_up_depth and routable < self.max_servers:
+            if self._hold_scale_up(fleet):
+                return 0
             self._cooldown = self.cooldown_rounds
             return +1
         if depth < self.scale_down_depth and routable > self.min_servers:
@@ -283,6 +316,39 @@ class SloScaling:
         return 0
 
 
+@dataclass
+class FabricAwareScaling(QueueDepthScaling):
+    """Queue-depth scaling that refuses to fight the network (ROADMAP:
+    fold fabric state into scaling). The storage tier is only worth
+    growing when *compute* is the bottleneck; when the WAN egress trunk
+    is saturated — the tenants' measured (EWMA) bandwidths sum to
+    ``trunk_saturation`` of its capacity — another replica can't serve a
+    byte faster, so a scale-up the queue-depth signal asks for is held
+    (and recorded as a ``scale-hold`` trace event). Scale-*down* is
+    untouched: shedding idle compute is always safe. On private-link
+    deployments there is no fabric and the policy degrades to plain
+    queue-depth scaling."""
+
+    name: str = "fabric"
+    trunk_saturation: float = 0.85
+
+    def _trunk_bound(self, fleet: "HapiFleet") -> bool:
+        fabric = getattr(fleet, "fabric", None)
+        if fabric is None:
+            return False
+        observed = [p.observed_bw for p in fabric.ports.values()
+                    if p.tenant is not None and p.observed_bw]
+        if not observed:
+            return False
+        return sum(observed) >= self.trunk_saturation * fabric.trunk.capacity
+
+    def _hold_scale_up(self, fleet: "HapiFleet") -> bool:
+        if not self._trunk_bound(fleet):
+            return False
+        fleet.sim.record(fleet._vtime, "scale-hold", "trunk-bound")
+        return True
+
+
 DEFAULT_ROUTING = ReplicaAwareRouting
 DEFAULT_PLACEMENT = RoundRobinPlacement
 DEFAULT_SCALING = QueueDepthScaling
@@ -292,6 +358,7 @@ DEFAULT_SCALING = QueueDepthScaling
 ROUTING_POLICIES = {
     "replica-aware": ReplicaAwareRouting,
     "least-loaded": LeastLoadedRouting,
+    "fabric-aware": FabricAwareRouting,
 }
 PLACEMENT_POLICIES = {
     "round-robin": RoundRobinPlacement,
@@ -300,4 +367,5 @@ PLACEMENT_POLICIES = {
 SCALING_POLICIES = {
     "queue-depth": QueueDepthScaling,
     "slo": SloScaling,
+    "fabric": FabricAwareScaling,
 }

@@ -107,13 +107,20 @@ class HapiClient:
         fabric: Optional["NetworkFabric"] = None,
         resplit_every: int = 0,                # 0 = split fixed for the epoch
         bw_ewma_alpha: float = 0.25,
+        network_weight: Optional[float] = None,  # service class; None adopts
+                                                 # the link's (1.0 otherwise)
     ) -> None:
         self.server = server
         if link is None:
             from repro.cos.network import wan_link
 
-            link = wan_link(tenant, hapi.network_bandwidth, fabric)
+            link = wan_link(tenant, hapi.network_bandwidth, fabric,
+                            weight=1.0 if network_weight is None
+                            else network_weight)
         self.link = link
+        if network_weight is None:
+            network_weight = getattr(link, "weight", 1.0)
+        self.network_weight = float(network_weight)
         self.profile = profile
         self.hapi = hapi
         self.model_key = model_key
@@ -130,6 +137,16 @@ class HapiClient:
             self.accel.attach(self.sim)
             self.link.attach(self.sim)
         self.log = EventLog()
+        # Rendezvous for responses drained by the "wrong" tenant on a
+        # shared server/fleet: strangers we drain are stashed here for
+        # their owner, and we claim our own strays from it — never
+        # silently dropped. The dict is the *server's* (shared by every
+        # client of the deployment, which is what makes cross-tenant
+        # delivery work); bare stub servers without one get a local dict.
+        self.unclaimed: Dict[int, PostResponse] = \
+            getattr(server, "unclaimed", None)
+        if self.unclaimed is None:
+            self.unclaimed = {}
         self._next_req = tenant * 1_000_000
         self.resplit_every = resplit_every
         self.bw_ewma_alpha = bw_ewma_alpha
@@ -209,10 +226,21 @@ class HapiClient:
                 profile=self.profile, arrival=t,
                 compress=self.hapi.compress_transfer,
                 adaptable=not self.push_training,
+                network_weight=self.network_weight,
             ))
             self.server.submit(reqs[-1])
         responses = self.server.drain(now=t)
-        by_id = {r.req_id: r for r in responses}
+        ours = {r.req_id for r in reqs}
+        by_id = {}
+        for resp in responses:
+            if resp.req_id in ours:
+                by_id[resp.req_id] = resp
+            else:           # burst traffic sharing the fleet: surface it
+                self.unclaimed[resp.req_id] = resp
+        # A previous shared drain may have served one of ours already.
+        for rid in ours - by_id.keys():
+            if rid in self.unclaimed:
+                by_id[rid] = self.unclaimed.pop(rid)
         if any(r.req_id not in by_id for r in reqs):
             return None  # rejected -> OOM
 
@@ -231,11 +259,22 @@ class HapiClient:
                         object_name=dup.object_name, b_max=dup.b_max,
                         profile=dup.profile, arrival=d.arrival, compress=dup.compress,
                         adaptable=dup.adaptable,
+                        network_weight=dup.network_weight,
                     )
                     self.server.submit(dup)
+                    # A shared fleet may drain unrelated pending requests
+                    # in the same call: select the duplicate's response by
+                    # req_id (not position) and surface the rest for
+                    # their owners instead of dropping them.
                     redo = self.server.drain(now=d.arrival)
-                    if redo and redo[0].finished < d.finished:
-                        done[i] = redo[0]
+                    dup_resp = None
+                    for r in redo:
+                        if r.req_id == dup.req_id:
+                            dup_resp = r
+                        else:
+                            self.unclaimed[r.req_id] = r
+                    if dup_resp is not None and dup_resp.finished < d.finished:
+                        done[i] = dup_resp
                         reissued += 1
 
         # ``done`` is already in request order (built from ``reqs``; a
@@ -374,7 +413,12 @@ class BaselineClient:
     Link handling matches :class:`HapiClient`: ``link`` is optional
     (``None`` self-constructs a private WAN link at ``bandwidth``, or a
     fabric port when a shared :class:`~repro.cos.network.NetworkFabric`
-    is given), so baseline runs can contend on the same trunk."""
+    is given), so baseline runs can contend on the same trunk. Sim
+    handling matches too: when the store carries a shared
+    :class:`~repro.cos.clock.Simulator` the client joins it, so baseline
+    transfers and compute show up in the fleet-wide trace, and the
+    accelerator is tenant-qualified (two baseline tenants must not
+    collide on one timeline name)."""
 
     def __init__(self, store: ObjectStore, link: Optional[Link],
                  profile: LayerProfile,
@@ -384,20 +428,27 @@ class BaselineClient:
                  mxu_efficiency: float = 0.4,
                  tenant: int = 0,
                  bandwidth: Optional[float] = None,
-                 fabric: Optional["NetworkFabric"] = None) -> None:
+                 fabric: Optional["NetworkFabric"] = None,
+                 network_weight: float = 1.0) -> None:
         self.store = store
         if link is None:
             from repro.cos.network import wan_link
 
             bw = bandwidth if bandwidth is not None \
                 else HapiConfig().network_bandwidth
-            link = wan_link(tenant, bw, fabric, name=f"wan{tenant}-base")
+            link = wan_link(tenant, bw, fabric, name=f"wan{tenant}-base",
+                            weight=network_weight)
         self.link = link
         self.tenant = tenant
         self.profile = profile
         eff = client_flops if has_accelerator else client_flops / 40.0
-        self.accel = Accelerator(name="client-base", flops=eff, hbm=client_hbm)
+        self.accel = Accelerator(name=f"client{tenant}-base", flops=eff,
+                                 hbm=client_hbm)
         self.mxu_efficiency = mxu_efficiency
+        self.sim = getattr(store, "sim", None)
+        if self.sim is not None:
+            self.accel.attach(self.sim)
+            self.link.attach(self.sim)
 
     def run_epoch(self, dataset: str, train_batch: int, *, t0: float = 0.0,
                   freeze_index: Optional[int] = None,

@@ -146,6 +146,10 @@ class HapiFleet:
         self._req_by_id: Dict[int, PostRequest] = {}
         self.reissued = 0
         self.rejected: List[int] = []
+        # Cross-tenant response rendezvous (same contract as
+        # HapiServer.unclaimed): responses drained by one tenant's client
+        # on behalf of another wait here for their owner.
+        self.unclaimed: Dict[int, PostResponse] = {}
         self.served_by_server: Dict[int, int] = {}
         self.tenant_stats: Dict[int, TenantStats] = {}
         self._vtime = 0.0                            # fleet-wide virtual time
@@ -176,6 +180,14 @@ class HapiFleet:
     @property
     def alive(self) -> bool:
         return self.n_alive > 0
+
+    @property
+    def fabric(self):
+        """The shared :class:`~repro.cos.network.NetworkFabric` behind
+        the store's links, or None on private-link deployments — what
+        fabric-aware policies read (trunk capacity, per-tenant measured
+        bandwidth, storage ingress busyness)."""
+        return getattr(self.store, "fabric", None)
 
     @property
     def adapt_results(self):

@@ -26,7 +26,14 @@ Two resolution paths:
 * :meth:`NetworkFabric.transfer_concurrent` — batch resolution with true
   max-min water-filling across the batch: rates are recomputed at every
   flow start/finish and at every committed-profile breakpoint (the
-  fair-share convergence tests drive this directly).
+  fair-share convergence tests drive this directly). Sharing is
+  **weighted**: every flow carries a weight (its port's
+  ``weight`` — the tenant's service class — unless the request
+  overrides it) and a bottleneck link's residual is divided
+  proportionally, share-per-unit-weight = residual / Σweights. Weight 1
+  everywhere reproduces the unweighted schedules bit-for-bit, so
+  existing event logs are unchanged until someone actually buys a
+  gold tier.
 
 Contended *epochs* are driven by :func:`run_concurrently`, which steps
 per-tenant :class:`~repro.cos.client.EpochRun` objects
@@ -123,6 +130,7 @@ class FabricPort(Link):
     fabric: Optional["NetworkFabric"] = None
     trunk: Optional[SharedLink] = None
     tenant: Optional[int] = None
+    weight: float = 1.0                     # service class (gold > bronze)
     bytes_moved: float = 0.0
     observed_bw: Optional[float] = None     # EWMA of achieved bandwidth
     ewma_alpha: float = 0.25
@@ -146,7 +154,7 @@ class _Flow:
     """One batch-resolved transfer (transfer_concurrent bookkeeping)."""
 
     def __init__(self, idx: int, port: FabricPort, start: float,
-                 nbytes: float) -> None:
+                 nbytes: float, weight: Optional[float] = None) -> None:
         self.idx = idx
         self.port = port
         self.start = start                       # port acquisition time
@@ -154,6 +162,7 @@ class _Flow:
         self.tx0 = start + lat                   # transmission begins
         self.nbytes = nbytes
         self.remaining = nbytes
+        self.weight = port.weight if weight is None else float(weight)
         self.end = math.inf
         self.segments: List[Tuple[float, float, float]] = []
 
@@ -195,11 +204,15 @@ class NetworkFabric:
 
     def tenant_port(self, tenant: int, bandwidth: float, *,
                     latency: float = 1e-3,
-                    name: Optional[str] = None) -> FabricPort:
-        """The tenant's NIC: private ``bandwidth``, shared WAN trunk."""
+                    name: Optional[str] = None,
+                    weight: float = 1.0) -> FabricPort:
+        """The tenant's NIC: private ``bandwidth``, shared WAN trunk.
+        ``weight`` is the tenant's service class — its flows' default
+        share of any contended link under weighted max-min sharing."""
         return self._add_port(FabricPort(
             name=name or f"wan{tenant}", bandwidth=bandwidth, latency=latency,
-            fabric=self, trunk=self.trunk, tenant=tenant))
+            fabric=self, trunk=self.trunk, tenant=tenant,
+            weight=float(weight)))
 
     def storage_port(self, index: int, bandwidth: float, *,
                      latency: float = 2e-4) -> FabricPort:
@@ -285,18 +298,23 @@ class NetworkFabric:
 
     # -- batch resolution: true max-min fair sharing ----------------------------
     def transfer_concurrent(
-        self, requests: Sequence[Tuple[FabricPort, float, float]]
+        self, requests: Sequence[Tuple]
     ) -> List[Tuple[float, float]]:
         """Resolve a batch of flows *together*: active flows share every
-        link max-min (per-flow cap = port rate; trunk capacity net of
-        committed profiles), with rates recomputed at every flow
+        link weighted-max-min (per-flow cap = port rate; trunk capacity
+        net of committed profiles), with rates recomputed at every flow
         start/finish and committed breakpoint. ``requests`` is a list of
-        ``(port, start, nbytes)``; returns ``[(actual_start, end), ...]``
-        in request order."""
-        for trunk in {p.trunk for (p, _s, _n) in requests if p.trunk}:
+        ``(port, start, nbytes)`` or ``(port, start, nbytes, weight)``
+        — an explicit weight overrides the port's (the storage batch
+        window tags each read with the owning tenant's class this way);
+        returns ``[(actual_start, end), ...]`` in request order."""
+        norm = [(r[0], r[1], r[2], r[3] if len(r) > 3 else None)
+                for r in requests]
+        for trunk in {p.trunk for (p, _s, _n, _w) in norm if p.trunk}:
             self._prune(trunk)
-        flows = [_Flow(i, port, max(start, port.busy_until), float(nbytes))
-                 for i, (port, start, nbytes) in enumerate(requests)]
+        flows = [_Flow(i, port, max(start, port.busy_until), float(nbytes),
+                       weight)
+                 for i, (port, start, nbytes, weight) in enumerate(norm)]
         pending = sorted(flows, key=lambda f: (f.tx0, f.idx))
         active: List[_Flow] = []
         t = pending[0].tx0 if pending else 0.0
@@ -353,10 +371,14 @@ class NetworkFabric:
         return out
 
     def _max_min(self, active: List[_Flow], t: float) -> Dict[int, float]:
-        """Max-min water-filling over the links the active flows touch.
-        Repeatedly freeze the flows of the bottleneck link (smallest fair
-        share) at that share. Deterministic: links visited in sorted key
-        order, flows in index order."""
+        """Weighted max-min water-filling over the links the active flows
+        touch. Repeatedly freeze the flows of the bottleneck link — the
+        one with the smallest fair share *per unit weight*
+        (residual / Σweights of its unfrozen flows) — at that unit share
+        scaled by each flow's weight. All weights 1 reduces to the
+        classic equal-share fill bit-for-bit (Σ of ones is exactly the
+        count, and ``share * 1.0`` is ``share``). Deterministic: links
+        visited in sorted key order, flows in index order."""
         caps: Dict[Tuple[str, str], float] = {}
         members: Dict[Tuple[str, str], List[_Flow]] = {}
 
@@ -377,30 +399,57 @@ class NetworkFabric:
                 un = [f for f in members[key] if f.idx not in frozen]
                 if not un:
                     continue
-                share = max(residual[key], 0.0) / len(un)
+                share = max(residual[key], 0.0) / sum(f.weight for f in un)
                 if best is None or share < best[0] - _EPS:
                     best = (share, key, un)
             assert best is not None
             share, _key, un = best
             for f in un:
-                rates[f.idx] = share
+                rates[f.idx] = share * f.weight
                 frozen.add(f.idx)
-                residual[("port", f.port.name)] -= share
+                residual[("port", f.port.name)] -= share * f.weight
                 if f.port.trunk is not None:
-                    residual[("trunk", f.port.trunk.name)] -= share
+                    residual[("trunk", f.port.trunk.name)] -= share * f.weight
         return rates
+
+
+def measure_trunk_shares(weights: Sequence[float], trunk_bandwidth: float,
+                         *, nbytes: float = 2e9) -> List[float]:
+    """Empirically measure the trunk split of two backlogged service
+    classes: one flow per class on a fresh fabric, started together with
+    equal bytes, ports at the trunk rate. While both are active the
+    trunk divides in weight proportion (weighted max-min water-filling);
+    the single late finisher then owns the trunk for its solo tail, so
+    its bytes inside the contended window are its total minus that tail
+    — arithmetic that only holds for exactly two classes, hence the
+    assert. Returns bytes/s of the trunk each class achieved during the
+    contended window (the QoS benchmark asserts their ratio tracks the
+    weight ratio; the contended-tenants example prints them)."""
+    assert len(weights) == 2, "trunk-share probe compares exactly two classes"
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=trunk_bandwidth))
+    ports = [fabric.tenant_port(i, bandwidth=trunk_bandwidth, latency=0.0,
+                                weight=w)
+             for i, w in enumerate(weights)]
+    ends = [e for _s, e in
+            fabric.transfer_concurrent([(p, 0.0, nbytes) for p in ports])]
+    window = min(ends)
+    return [(nbytes - trunk_bandwidth * max(e - window, 0.0)) / window
+            for e in ends]
 
 
 def wan_link(tenant: int, bandwidth: float,
              fabric: Optional[NetworkFabric] = None, *,
-             name: Optional[str] = None, latency: float = 1e-3) -> Link:
+             name: Optional[str] = None, latency: float = 1e-3,
+             weight: float = 1.0) -> Link:
     """The one way a tenant's WAN link is built: a fabric port (shared
     trunk) when a fabric is given, a private fixed-rate :class:`Link`
     otherwise. Used by both clients and the cluster facade so the two
-    models can never drift apart."""
+    models can never drift apart. ``weight`` is the tenant's service
+    class; it only matters on a shared fabric (a private link has
+    nothing to share)."""
     if fabric is not None:
         return fabric.tenant_port(tenant, bandwidth=bandwidth,
-                                  latency=latency, name=name)
+                                  latency=latency, name=name, weight=weight)
     return Link(name=name or f"wan{tenant}", bandwidth=bandwidth,
                 latency=latency)
 

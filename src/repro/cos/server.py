@@ -5,7 +5,9 @@ Requests are lightweight fixed-size POSTs. The server:
   1. waits a small window for request coalescing,
   2. runs Eq. 4 batch adaptation over the queue per accelerator
      (admitted requests get a COS batch size; overflow defers),
-  3. reads the object from the storage nodes (replica-balanced),
+  3. reads the objects from the storage nodes (replica-balanced; on a
+     shared network fabric the round's reads resolve as one concurrent
+     batch, sharing contended storage links weighted by tenant class),
   4. executes feature extraction up to the split index — real JAX compute
      when an executor is registered, always charged on the virtual clock
      from profiled FLOPs,
@@ -42,6 +44,7 @@ class PostRequest:
     arrival: float
     compress: bool = False
     adaptable: bool = True      # False: ALL_IN_COS — batch cannot shrink
+    network_weight: float = 1.0  # tenant service class (weighted fabric share)
 
 
 @dataclass
@@ -97,6 +100,11 @@ class HapiServer:
         self.mxu_efficiency = mxu_efficiency
         self.queue: List[PostRequest] = []
         self.leases: List[_Lease] = []
+        # Served responses a *different* caller drained on the owner's
+        # behalf (shared-server bursts): clients stash strangers here and
+        # claim their own, so no response is ever silently dropped. Lives
+        # on the server because it is the rendezvous all tenants share.
+        self.unclaimed: Dict[int, PostResponse] = {}
         self.executors: Dict[str, Callable] = {}
         self.log = EventLog()
         self.adapt_results: List[AdaptResult] = []
@@ -199,8 +207,19 @@ class HapiServer:
         # Execute in queue order (not accelerator-major): admitted requests
         # hit the shared storage nodes in their arrival interleaving, so one
         # accelerator's batch cannot monopolize the read path.
-        for _, req, batch, mem, ai in sorted(planned, key=lambda p: p[0]):
-            resp = self._execute(req, batch, mem, ai, t)
+        ordered = sorted(planned, key=lambda p: p[0])
+        # Batch window: the round's storage reads resolve as one
+        # transfer_concurrent batch (weighted by tenant class) whenever
+        # they would actually share a storage link; read_batch returns
+        # None otherwise and each request reads on its own, exactly as
+        # before.
+        reads = self.store.read_batch(
+            [p[1].object_name for p in ordered], t,
+            [p[1].network_weight for p in ordered]) if len(ordered) > 1 \
+            else None
+        for i, (_, req, batch, mem, ai) in enumerate(ordered):
+            resp = self._execute(req, batch, mem, ai, t,
+                                 pre_read=reads[i] if reads else None)
             responses.append(resp)
             self.queue.remove(req)
             progressed = True
@@ -230,9 +249,11 @@ class HapiServer:
         return m * (1 + prof.headroom)
 
     def _execute(self, req: PostRequest, cos_batch: int, mem: float,
-                 accel_idx: int, t: float) -> PostResponse:
+                 accel_idx: int, t: float,
+                 pre_read: Optional[Tuple[Any, float]] = None) -> PostResponse:
         accel = self.accels[accel_idx]
-        obj, t_data = self.store.read(req.object_name, t)
+        obj, t_data = pre_read if pre_read is not None \
+            else self.store.read(req.object_name, t)
 
         n = obj.n_samples
         prof = req.profile
@@ -251,7 +272,16 @@ class HapiServer:
         eff *= min(1.0, cos_batch / 128.0)
         start, end = accel.compute(max(t_data, t), flops + 1e3, efficiency=eff)
         end += load_time
-        accel.try_alloc(mem)
+        # Eq. 4's whole point is that admission provably fits the HBM
+        # budget; a failed allocation here means the adaptation invariant
+        # broke upstream and must never be executed through silently.
+        # (The allocation stays outside the assert so `python -O` still
+        # accounts the memory.)
+        allocated = accel.try_alloc(mem)
+        assert allocated, (
+            f"batch adaptation overcommitted {accel.name}: "
+            f"alloc {mem:.3e} B with {accel.mem_used:.3e}/{accel.hbm:.3e} used"
+        )
         self.leases.append(_Lease(end=end, nbytes=mem, accel=accel_idx))
 
         acts = None

@@ -22,6 +22,13 @@ printing each tenant's final split and measured-bandwidth EWMA:
 
     PYTHONPATH=src python -m repro.launch.serve --cos-fleet 4 --tenants 4 \\
         --network-trunk 1.0
+
+``--tenant-weight 2,1`` assigns QoS service classes (gold/bronze) cycled
+over the tenants: contended fabric links are shared in weight
+proportion. ``--scaling fabric`` / ``--routing fabric-aware`` select the
+network-aware fleet policies (scale-ups are held while the WAN trunk,
+not compute, is the bottleneck; routing prefers replicas whose storage
+ingress is idle).
 """
 from __future__ import annotations
 
@@ -133,12 +140,15 @@ def serve_cos_contended(n_servers: int, *, n_tenants: int = 4, seed: int = 0,
                         autoscale: bool = True,
                         routing: str = "replica-aware",
                         placement: str = "round-robin",
-                        scaling: str = "queue-depth"):
+                        scaling: str = "queue-depth",
+                        weights=None):
     """Co-scheduled tenant epochs on a shared WAN egress trunk: every
-    tenant's activation pulls are flows contending under max-min fair
-    sharing, and each client re-decides its split from the measured
-    bandwidth EWMA (``resplit_every`` iterations). Fleet policies are
-    selected by registry name, exactly like :func:`serve_cos_fleet`."""
+    tenant's activation pulls are flows contending under weighted
+    max-min fair sharing, and each client re-decides its split from the
+    measured bandwidth EWMA (``resplit_every`` iterations). Fleet
+    policies are selected by registry name, exactly like
+    :func:`serve_cos_fleet`; ``weights`` assigns per-tenant service
+    classes (cycled over tenants; all 1.0 when None)."""
     from repro.api import (HapiCluster, NetworkSpec, PLACEMENT_POLICIES,
                            ROUTING_POLICIES, SCALING_POLICIES, TenantSpec)
     from repro.config import HapiConfig
@@ -155,16 +165,19 @@ def serve_cos_contended(n_servers: int, *, n_tenants: int = 4, seed: int = 0,
     if autoscale:
         cluster.with_scaling(SCALING_POLICIES[scaling](
             min_servers=1, max_servers=max_servers))
+    weights = weights or [1.0]
     handles = [cluster.tenant(TenantSpec(
         model="alexnet", hapi=HapiConfig(network_bandwidth=bw),
-        client_flops=197e12, resplit_every=resplit_every))
-        for _ in range(n_tenants)]
+        client_flops=197e12, resplit_every=resplit_every,
+        network_weight=weights[i % len(weights)]))
+        for i in range(n_tenants)]
     results = cluster.run_epochs([(h, "serve", train_batch) for h in handles])
     tenants = []
     for h, r in zip(handles, results):
         ewma = h.client.observed_bw
         tenants.append({
             "tenant": h.tenant_id,
+            "weight": h.spec.network_weight,
             "split": r.split,
             "resplits": r.resplits,
             "jct": r.execution_time,
@@ -191,6 +204,10 @@ def main(argv=None):
                     help="share one WAN egress trunk of GBPS across all "
                          "tenants (contention-aware split re-decision)")
     ap.add_argument("--resplit-every", type=int, default=2)
+    ap.add_argument("--tenant-weight", default="", metavar="W[,W...]",
+                    help="per-tenant QoS weights, cycled over tenants "
+                         "(e.g. '2,1' = gold/bronze); only meaningful "
+                         "with --network-trunk")
     from repro.api import (PLACEMENT_POLICIES, ROUTING_POLICIES,
                            SCALING_POLICIES)
 
@@ -202,6 +219,8 @@ def main(argv=None):
                     choices=sorted(SCALING_POLICIES))
     args = ap.parse_args(argv)
     if args.cos_fleet and args.network_trunk > 0:
+        weights = ([float(w) for w in args.tenant_weight.split(",")]
+                   if args.tenant_weight else None)
         out = serve_cos_contended(args.cos_fleet, n_tenants=args.tenants,
                                   seed=args.seed,
                                   trunk_gbps=args.network_trunk,
@@ -209,12 +228,14 @@ def main(argv=None):
                                   max_servers=args.max_servers,
                                   routing=args.routing,
                                   placement=args.placement,
-                                  scaling=args.scaling)
+                                  scaling=args.scaling,
+                                  weights=weights)
         print(f"shared trunk {args.network_trunk:.2f} Gbps, "
               f"{len(out['tenants'])} tenants:")
         for t in out["tenants"]:
             bw = t["effective_bandwidth"]
-            print(f"tenant {t['tenant']}: split={t['split']:2d} "
+            print(f"tenant {t['tenant']} (w={t['weight']:g}): "
+                  f"split={t['split']:2d} "
                   f"(resplits={t['resplits']}) jct={t['jct']:6.2f}s "
                   f"{t['throughput']:8.1f} samples/s "
                   f"ewma={bw / 1e6 if bw else 0:6.1f} MB/s")

@@ -211,3 +211,134 @@ def test_live_execution_matches_offline():
     expected = vm.apply_range(params, jnp.asarray(x[:32]), 0, split)
     np.testing.assert_allclose(np.asarray(resp.acts), np.asarray(expected),
                                atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions (PR 4)
+# ---------------------------------------------------------------------------
+class _ScriptedServer:
+    """Stub with the server surface the client uses; each drain() call
+    pops the next scripted response batch (shared-fleet style: a drain
+    may return responses to requests the caller never issued)."""
+
+    def __init__(self, script):
+        self.script = [list(batch) for batch in script]
+        self.submitted = []
+        self.unclaimed = {}     # the shared rendezvous real servers carry
+
+    def submit(self, req):
+        self.submitted.append(req)
+
+    def drain(self, now=0.0):
+        return self.script.pop(0) if self.script else []
+
+
+def _resp(req_id, finished, act_bytes=1000.0, arrival=0.0):
+    from repro.cos.server import PostResponse
+
+    return PostResponse(req_id=req_id, tenant=0, object_name=f"o{req_id}",
+                        acts=None, act_bytes=act_bytes, cos_batch=100,
+                        arrival=arrival, started=arrival, finished=finished)
+
+
+def test_straggler_reissue_selects_duplicate_by_req_id(prof):
+    """The re-issue drain on a shared fleet can return unrelated pending
+    responses first: the duplicate must be matched by req_id (not
+    position) and the strangers surfaced, not dropped."""
+    # Iteration issues reqs 1,2,3 (tenant 0); 3 is a straggler
+    # (finished 10 > 2x median 1). The redo drain returns an unrelated
+    # response *first*, then the duplicate (req_id 3 + 500_000).
+    stranger = _resp(999_777, 5.0, act_bytes=4444.0)
+    dup = _resp(500_003, 2.0, act_bytes=7777.0)
+    server = _ScriptedServer([
+        [_resp(1, 1.0), _resp(2, 1.0), _resp(3, 10.0, act_bytes=3333.0)],
+        [stranger, dup],
+    ])
+    client = HapiClient(server, Link(name="wan", bandwidth=1e9), prof,
+                        HapiConfig(), "alexnet", straggler_factor=2.0)
+    stats = client._run_iteration(0, 0.0, ["o1", "o2", "o3"], 5, 300)
+    assert stats is not None and stats.reissued == 1
+    # The duplicate (7777 B) was pulled instead of the straggler (3333 B).
+    assert stats.wire_bytes == pytest.approx(1000.0 + 1000.0 + 7777.0)
+    # The unrelated response is surfaced for its owner, not discarded.
+    assert client.unclaimed[999_777] is stranger
+    # The slow original's response may arrive later via another drain —
+    # it must not shadow anything (id 3 was already answered).
+
+
+def test_client_claims_own_response_from_earlier_shared_drain(prof):
+    """A response served while another tenant held the drain loop is
+    stashed in `unclaimed`; the owner claims it instead of declaring the
+    request rejected (OOM)."""
+    server = _ScriptedServer([
+        [_resp(1, 1.0), _resp(2, 1.0)],      # req 3's response is missing...
+    ])
+    client = HapiClient(server, Link(name="wan", bandwidth=1e9), prof,
+                        HapiConfig(), "alexnet")
+    client.unclaimed[3] = _resp(3, 1.5)      # ...it was drained earlier
+    stats = client._run_iteration(0, 0.0, ["o1", "o2", "o3"], 5, 300)
+    assert stats is not None and stats.n_posts == 3
+    assert 3 not in client.unclaimed         # claimed exactly once
+
+
+def test_unclaimed_stash_is_shared_across_clients(prof):
+    """The rendezvous lives on the *server*, so a response drained by
+    tenant A's client is claimable by its owner, tenant B — the
+    cross-tenant half of the silently-dropped-response fix."""
+    b_req_id = 2 * 1_000_000 + 1          # tenant 2's first request id
+    server = _ScriptedServer([
+        [_resp(1, 1.0), _resp(b_req_id, 1.2)],   # A's drain serves B too
+        [],                                       # B's own drain is empty
+    ])
+    a = HapiClient(server, Link(name="wanA", bandwidth=1e9), prof,
+                   HapiConfig(), "alexnet", tenant=0)
+    b = HapiClient(server, Link(name="wanB", bandwidth=1e9), prof,
+                   HapiConfig(), "alexnet", tenant=2)
+    assert a.unclaimed is server.unclaimed is b.unclaimed
+    assert a._run_iteration(0, 0.0, ["o1"], 5, 300) is not None
+    assert b_req_id in server.unclaimed       # surfaced by A...
+    stats_b = b._run_iteration(0, 0.0, ["oB"], 5, 300)
+    assert stats_b is not None                # ...claimed by B, not an OOM
+    assert b_req_id not in server.unclaimed
+
+
+def test_execute_fails_loudly_on_overcommitted_allocation(prof):
+    """Eq. 4's no-OOM invariant: a failed HBM allocation must never be
+    executed through silently (the return value of try_alloc was being
+    ignored)."""
+    store = make_store(n=1000, obj=1000)
+    server = HapiServer(store, n_accelerators=1, hbm_per_accel=1e6)
+    req = PostRequest(1, 0, "alexnet", 5, "ds/part-00000", 200, prof, 0.0)
+    with pytest.raises(AssertionError, match="overcommitted"):
+        server._execute(req, 200, 2e6, 0, 0.0)   # 2 MB into a 1 MB HBM
+
+
+def test_objectstore_read_has_no_dead_node_choice_knob():
+    """ObjectStore.read(node_choice=...) never did anything; the knob is
+    gone so policy authors cannot be misled by it."""
+    store = make_store(n=1000, obj=1000)
+    with pytest.raises(TypeError):
+        store.read("ds/part-00000", 0.0, node_choice=1)
+    import inspect
+
+    assert "node_choice" not in inspect.signature(store.read).parameters
+
+
+def test_baseline_client_joins_shared_sim_with_tenant_names(prof):
+    """BaselineClient mirrors HapiClient's sim-join: on a sim-attached
+    store its link and accelerator are traced, and accelerator names are
+    tenant-qualified so two baseline tenants cannot collide."""
+    from repro.cos.clock import Simulator
+
+    store = make_store(n=2000, obj=1000)
+    sim = Simulator(0)
+    store.attach_sim(sim)
+    b2 = BaselineClient(store, None, prof, tenant=2, bandwidth=1e9)
+    b5 = BaselineClient(store, None, prof, tenant=5, bandwidth=1e9)
+    assert b2.accel.name == "client2-base"
+    assert b5.accel.name == "client5-base"
+    assert b2.accel.name != b5.accel.name
+    b2.run_epoch("ds", train_batch=1000, max_iterations=1)
+    names = {d.split()[0] for _t, k, d in sim.log.events if k == "busy"}
+    assert "client2-base" in names          # compute is in the shared trace
+    assert "wan2-base" in names             # and so is the transfer

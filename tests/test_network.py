@@ -1,13 +1,17 @@
 """Shared-bandwidth network fabric tests: single-flow byte-compat with
-the private-Link model, max-min fair-share convergence, contended-run
-determinism, and contention-aware split migration (paper §7.7)."""
+the private-Link model, (weighted) max-min fair-share convergence,
+contended-run determinism, contention-aware split migration (paper
+§7.7), tenant QoS classes, and the fabric-aware fleet policies."""
+import numpy as np
 import pytest
 
-from repro.api import HapiCluster, NetworkSpec, TenantSpec
+from repro.api import (FabricAwareRouting, FabricAwareScaling, HapiCluster,
+                       NetworkSpec, TenantSpec)
 from repro.config import HapiConfig
 from repro.core.profiler import profile_layered
 from repro.cos.clock import Link, Simulator
 from repro.cos.network import NetworkFabric, run_concurrently
+from repro.cos.objectstore import ObjectStore
 from repro.models.vision import alexnet
 
 TRUNK = 1e9 / 8          # 1 Gbps, the paper's testbed rate
@@ -147,6 +151,213 @@ def test_synchronous_flows_respect_committed_profiles():
     assert e1 == pytest.approx(20.0)
     assert fabric.effective_bandwidth(0) == pytest.approx(100.0)
     assert fabric.effective_bandwidth(1) == pytest.approx(50.0)
+
+
+# ---------------------------------------------------------------------------
+# Weighted fair sharing (tenant QoS classes)
+# ---------------------------------------------------------------------------
+def test_weighted_flows_share_trunk_2to1():
+    """Gold (w=2) vs bronze (w=1) on one trunk: rates split 2:1 while
+    both are active; the bronze flow finishes its backlog alone."""
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=100.0))
+    gold = fabric.tenant_port(0, bandwidth=100.0, latency=0.0, weight=2.0)
+    bronze = fabric.tenant_port(1, bandwidth=100.0, latency=0.0, weight=1.0)
+    out = fabric.transfer_concurrent([(gold, 0.0, 1000.0),
+                                      (bronze, 0.0, 1000.0)])
+    # gold: 1000 B @ 66.67 B/s -> 15 s; bronze: 500 B by then, the rest
+    # at the full rate -> 20 s.
+    assert out[0][1] == pytest.approx(15.0)
+    assert out[1][1] == pytest.approx(20.0)
+
+
+def test_weighted_share_respects_port_cap():
+    """A gold flow behind a slow NIC freezes at the NIC rate and the
+    leftover goes to bronze — weighted water-filling, not proportional
+    starvation."""
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=100.0))
+    gold = fabric.tenant_port(0, bandwidth=20.0, latency=0.0, weight=4.0)
+    bronze = fabric.tenant_port(1, bandwidth=100.0, latency=0.0, weight=1.0)
+    out = fabric.transfer_concurrent([(gold, 0.0, 1000.0),
+                                      (bronze, 0.0, 1000.0)])
+    assert out[0][1] == pytest.approx(50.0)    # 20 B/s throughout
+    assert out[1][1] == pytest.approx(12.5)    # 80 B/s until done
+
+
+def test_per_request_weight_overrides_port_weight():
+    """transfer_concurrent accepts (port, start, nbytes, weight): the
+    storage batch window tags reads with the owning tenant's class even
+    though the storage port itself is weight-1."""
+    fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=100.0))
+    p = fabric.tenant_port(0, bandwidth=100.0, latency=0.0)   # weight 1
+    out = fabric.transfer_concurrent([(p, 0.0, 1000.0, 2.0),
+                                      (p, 0.0, 1000.0, 1.0)])
+    assert out[0][1] == pytest.approx(15.0)
+    assert out[1][1] == pytest.approx(20.0)
+
+
+def test_weight_one_is_bitwise_identical_to_unweighted():
+    """All-ones weights must reproduce the unweighted schedules exactly
+    (same floats, same port accounting) — the PR 3 logs are unchanged."""
+    def run(explicit):
+        fabric = NetworkFabric(NetworkSpec(trunk_bandwidth=100.0),
+                               sim=Simulator(0))
+        ports = [fabric.tenant_port(i, bandwidth=70.0, latency=1e-3)
+                 for i in range(3)]
+        reqs = [(p, 0.0, 1000.0, 1.0) if explicit else (p, 0.0, 1000.0)
+                for p in ports]
+        out = fabric.transfer_concurrent(reqs)
+        return out, [(p.busy_until, p.busy_time) for p in ports], \
+            fabric.sim.log.digest()
+
+    assert run(False) == run(True)
+
+
+def test_weight_one_cluster_digest_matches_default(prof):
+    """A contended fleet run with every tenant explicitly weight-1 is
+    byte-identical to the default — QoS plumbing is invisible until a
+    class is actually bought."""
+    def run(weight):
+        c = (HapiCluster(seed=7)
+             .with_servers(2, n_accelerators=2, flops_per_accel=197e12)
+             .with_dataset("ds", n_samples=2000, object_size=500,
+                           n_classes=100)
+             .with_network(NetworkSpec(trunk_bandwidth=TRUNK)))
+        handles = [c.tenant(TenantSpec(
+            model="alexnet", profile=prof,
+            hapi=HapiConfig(network_bandwidth=TRUNK), client_flops=197e12,
+            resplit_every=1, **({"network_weight": weight} if weight else {})))
+            for _ in range(3)]
+        c.run_epochs([(h, "ds", 500) for h in handles])
+        return c.event_digest()
+
+    assert run(None) == run(1.0)
+
+
+def test_weighted_shares_under_storage_batch_window():
+    """Two same-round reads on one storage node, tenant classes 2:1:
+    read_batch resolves them as one weighted concurrent batch — the gold
+    read finishes first, bronze absorbs the tail."""
+    store = ObjectStore(n_storage_nodes=1, replication=1,
+                        internal_bandwidth=100.0)
+    store.put_dataset("ds", {"x": np.zeros((2, 1), np.float32)},
+                      object_size=1)
+    for o in store.objects.values():
+        o.nbytes = 1000
+    store.use_fabric(NetworkFabric(NetworkSpec(trunk_bandwidth=1e12)))
+    lat = store.nodes[0].latency
+    out = store.read_batch(store.object_names("ds"), 0.0, [2.0, 1.0])
+    assert out is not None
+    assert out[0][1] == pytest.approx(lat + 15.0)
+    assert out[1][1] == pytest.approx(lat + 20.0)
+
+
+def test_drain_round_batches_reads_through_weighted_fabric(prof):
+    """End-to-end storage batch window: two same-round requests of
+    classes 2:1 on a one-node store resolve their reads as one weighted
+    concurrent batch — the gold tenant's object is ready first, at the
+    weighted-share times, visible in the shared trace."""
+    from repro.cos.server import HapiServer, PostRequest
+
+    store = ObjectStore(n_storage_nodes=1, replication=1,
+                        internal_bandwidth=100.0)
+    store.put_dataset("ds", {"x": np.zeros((2, 1), np.float32)},
+                      object_size=1)
+    for o in store.objects.values():
+        o.nbytes = 1000
+    sim = Simulator(0)
+    store.attach_sim(sim)
+    store.use_fabric(NetworkFabric(NetworkSpec(trunk_bandwidth=1e12),
+                                   sim=sim))
+    server = HapiServer(store, n_accelerators=2, sim=sim)
+    for i, (oname, w) in enumerate(zip(store.object_names("ds"),
+                                       [2.0, 1.0])):
+        server.submit(PostRequest(
+            req_id=i + 1, tenant=i, model_key="m", split=3,
+            object_name=oname, b_max=100, profile=prof, arrival=0.0,
+            network_weight=w))
+    assert len(server.drain()) == 2
+    t0 = server.wait_window + store.nodes[0].latency
+    ready = [t for t, k, _d in sim.log.events if k == "store.read"]
+    assert ready[0] == pytest.approx(t0 + 15.0)   # gold: 2/3 of the node
+    assert ready[1] == pytest.approx(t0 + 20.0)   # bronze absorbs the tail
+
+
+def test_read_batch_declines_when_no_sharing():
+    """No fabric, or reads that each own their node: read_batch returns
+    None so callers keep the historical per-request path (that is what
+    preserves uncontended logs byte-for-byte)."""
+    plain = ObjectStore(n_storage_nodes=2, replication=1)
+    plain.put_dataset("ds", {"x": np.zeros((2, 1), np.float32)},
+                      object_size=1)
+    assert plain.read_batch(plain.object_names("ds"), 0.0) is None
+
+    fab = ObjectStore(n_storage_nodes=2, replication=1)
+    fab.put_dataset("ds", {"x": np.zeros((2, 1), np.float32)},
+                    object_size=1)
+    fab.use_fabric(NetworkFabric(NetworkSpec(trunk_bandwidth=1e12)))
+    # Two objects round-robined onto two nodes: one read per node, no
+    # storage trunk -> nothing would share.
+    assert fab.read_batch(fab.object_names("ds"), 0.0) is None
+    # A shared storage trunk makes the same pair share after all.
+    trunked = ObjectStore(n_storage_nodes=2, replication=1)
+    trunked.put_dataset("ds", {"x": np.zeros((2, 1), np.float32)},
+                        object_size=1)
+    trunked.use_fabric(NetworkFabric(
+        NetworkSpec(trunk_bandwidth=1e12, storage_trunk_bandwidth=5e9)))
+    assert trunked.read_batch(trunked.object_names("ds"), 0.0) is not None
+
+
+# ---------------------------------------------------------------------------
+# Fabric-aware fleet policies
+# ---------------------------------------------------------------------------
+def test_fabric_aware_routing_prefers_idle_storage_ingress(prof):
+    c = (HapiCluster(seed=0)
+         .with_servers(2, n_accelerators=2)
+         .with_storage(n_nodes=2, replication=2)
+         .with_dataset("ds", n_samples=1000, object_size=500, n_classes=100)
+         .with_network(NetworkSpec(trunk_bandwidth=TRUNK))
+         .with_routing(FabricAwareRouting()))
+    fleet = c.fleet
+    oname = c.store.object_names("ds")[0]
+    from repro.cos.server import PostRequest
+
+    req = PostRequest(req_id=1, tenant=0, model_key="alexnet", split=3,
+                      object_name=oname, b_max=100, profile=prof,
+                      arrival=0.0)
+    # Both replicas are co-located candidates (replication=2). Tie on
+    # every queue signal -> replica-aware would take s0; a draining
+    # ingress on node0 must steer the POST to s1 instead.
+    assert fleet.routing.route(fleet, req, fleet.servers).server_id == 0
+    c.store.nodes[0].busy_until = 50.0
+    assert fleet.routing.route(fleet, req, fleet.servers).server_id == 1
+
+
+def test_fabric_aware_scaling_holds_scale_up_when_trunk_bound(prof):
+    c = (HapiCluster(seed=0)
+         .with_servers(2, n_accelerators=2)
+         .with_dataset("ds", n_samples=2000, object_size=500, n_classes=100)
+         .with_network(NetworkSpec(trunk_bandwidth=TRUNK)))
+    fleet = c.fleet
+    t = c.tenant(TenantSpec(model="alexnet", profile=prof,
+                            hapi=HapiConfig(network_bandwidth=TRUNK)))
+    c.submit_burst("ds", "alexnet", tenant=t.tenant_id, train_batch=500)
+    policy = FabricAwareScaling(scale_up_depth=0.5, max_servers=8)
+    port = next(p for p in c.fabric.ports.values()
+                if p.tenant == t.tenant_id)
+
+    # Trunk saturated: the queue-depth signal wants a replica but the
+    # wire cannot serve a byte faster -> hold (and say so in the trace).
+    port.observed_bw = c.fabric.trunk.capacity
+    assert policy.decide(fleet) == 0
+    assert any(e[1] == "scale-hold" for e in c.sim.log.events)
+    # Trunk has headroom -> the same queue pressure scales up.
+    port.observed_bw = 0.1 * c.fabric.trunk.capacity
+    assert policy.decide(fleet) == +1
+    # Without a fabric the policy degrades to plain queue-depth scaling.
+    plain = HapiCluster(seed=1).with_servers(2).with_dataset(
+        "ds", n_samples=1000, object_size=500, n_classes=100)
+    plain.submit_burst("ds", "alexnet", tenant=0, train_batch=500)
+    assert FabricAwareScaling(scale_up_depth=0.5).decide(plain.fleet) == +1
 
 
 # ---------------------------------------------------------------------------
