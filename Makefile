@@ -1,17 +1,18 @@
 # CI entry points. `make ci` is what a checkin must keep green.
 PY := PYTHONPATH=src python
 
-.PHONY: ci check tier1 fleet network collect fast bench-fleet bench-network \
-        fleet-smoke
+.PHONY: ci check tier1 fleet network sched collect fast bench-fleet \
+        bench-network bench-qos bench-all fleet-smoke qos-smoke
 
 # collect + the fast check tier first (fail fast on the most-churned
 # layers), then the full tier-1 run.
 ci: collect check tier1
 
-# The fast gate: fabric fast tests first (the most-churned subsystem),
-# then the fast test tier + a 2-server fleet_scaling smoke with the
-# determinism check (no BENCH_fleet.json written).
-check: network fast fleet-smoke
+# The fast gate: scheduler + fabric fast tests first (the most-churned
+# subsystems), then the fast test tier + the 2-server fleet_scaling and
+# 2-tenant qos_compute smokes with determinism checks (no BENCH_*.json
+# written).
+check: sched network fast fleet-smoke qos-smoke
 
 # Fail fast on collection regressions (e.g. a hard import of an
 # uninstalled dependency aborting whole test modules).
@@ -32,6 +33,12 @@ fleet:
 # policies, contended determinism, split migration). Fast: no jit.
 network:
 	$(PY) -m pytest -x -q tests/test_network.py
+
+# Compute-tier scheduler tests only (golden byte-compat vs pre-refactor
+# logs, WDRR==round-robin property, class-aware Eq. 4, coalescing
+# no-OOM, placement/scaling signals). Fast: no jit.
+sched:
+	$(PY) -m pytest -x -q tests/test_scheduler.py
 
 # Tier-1 without the slow calibration/e2e tests.
 fast:
@@ -54,3 +61,19 @@ bench-fleet:
 # log reproduces. Writes BENCH_network.json (incl. the weighted series).
 bench-network:
 	$(PY) benchmarks/network_contention.py --check-determinism
+
+# Compute-tier QoS: accelerator-time shares must track the 1:1/2:1/4:1
+# compute weights within 10% and cross-server coalescing must strictly
+# reduce stateless-reload bytes on the 2-replica/1-model sweep. Writes
+# BENCH_qos.json.
+bench-qos:
+	$(PY) benchmarks/qos_compute.py --check-determinism
+
+# 2-tenant tiny qos_compute sweep used by `make check` (no JSON).
+qos-smoke:
+	$(PY) benchmarks/qos_compute.py --smoke --check-determinism
+
+# Refresh every BENCH_*.json from one entrypoint (benchmarks/run.py
+# --bench registry).
+bench-all:
+	$(PY) benchmarks/run.py --bench all

@@ -1,0 +1,202 @@
+"""Compute-tier QoS benchmark: weighted accelerator-time shares and
+cross-server batch coalescing (BENCH_qos.json).
+
+    PYTHONPATH=src python benchmarks/qos_compute.py [--seed 0]
+        [--check-determinism] [--smoke] [--out BENCH_qos.json]
+
+Two sweeps through the :class:`repro.api.HapiCluster` facade:
+
+* **weighted shares** — two tenants with equal backlogs and compute
+  weights 1:1 / 2:1 / 4:1 contend for ONE replica's accelerators under
+  the WDRR scheduler. Measured over the contended window (until the
+  faster tenant's backlog drains), each tenant's accelerator time must
+  track its service-class weight within 10%. The workload keeps
+  admission un-bound (every request at b_max) so accelerator *time* is
+  accelerator *service*: Eq. 4's efficiency model would otherwise charge
+  the small-batch tenant more occupancy per sample served.
+
+* **coalescing** — the 2-replica/1-model sweep: the same burst replayed
+  with cross-server batch coalescing off vs on. Coalescing must serve
+  identical work while *strictly* reducing the total stateless-reload
+  bytes charged (warm-lease hits skip the model reload) AND without
+  inflating the makespan beyond 5% — the guard that a coalescer which
+  piles work onto the one warm replica (serializing the fleet for
+  microseconds of reload savings) fails loudly here. The on-run must
+  stay deterministic under replay.
+
+``--smoke`` is the `make check` gate: the 2:1 pair and a tiny coalescing
+sweep only, no JSON written.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from repro.api import HapiCluster
+from repro.cos.scheduler import windowed_accel_share
+
+MODEL = "alexnet"
+WEIGHT_PAIRS = [(1.0, 1.0), (2.0, 1.0), (4.0, 1.0)]
+
+
+def run_share(weights, *, seed: int = 0, n_samples: int = 6000,
+              object_size: int = 125) -> Dict:
+    """Windowed accelerator-time share of two backlogged tenants on one
+    replica under WDRR dispatch; the share ratio must match the
+    compute-weight ratio within 10%."""
+    c = (HapiCluster(seed=seed)
+         .with_servers(1, n_accelerators=2, flops_per_accel=65e12)
+         .with_dataset("qos", n_samples=n_samples, object_size=object_size,
+                       n_classes=100))
+    for t, w in enumerate(weights):
+        c.submit_burst("qos", MODEL, tenant=t, n_classes=100,
+                       compute_weight=w)
+    responses = c.drain()
+    busy, served, _end = windowed_accel_share(responses, len(weights))
+    ratio = busy[0] / busy[1]
+    want = weights[0] / weights[1]
+    return {
+        "weights": list(weights),
+        "accel_time": busy,
+        "served_in_window": served,
+        "share_ratio": ratio,
+        "weight_ratio": want,
+        "ok": abs(ratio - want) / want <= 0.10,
+        "event_log": c.event_digest(),
+    }
+
+
+def run_coalesce(*, seed: int = 0, n_samples: int = 4000,
+                 object_size: int = 500) -> Dict:
+    """2-replica/1-model sweep: identical bursts with coalescing off vs
+    on; coalescing must strictly reduce the reload bytes charged while
+    serving identical work."""
+    def run(coalescing):
+        c = (HapiCluster(seed=seed)
+             .with_servers(2, n_accelerators=1, flops_per_accel=65e12)
+             .with_dataset("qos", n_samples=n_samples,
+                           object_size=object_size, n_classes=100)
+             .with_scheduler(coalescing=coalescing))
+        for t in (0, 1):
+            c.submit_burst("qos", MODEL, tenant=t, n_classes=100)
+        responses = c.drain()
+        sched = c.fleet.scheduler
+        return {
+            "served": len(responses),
+            "makespan": c.fleet.makespan(),
+            "work": sorted((r.tenant, r.object_name) for r in responses),
+            "reload_bytes": sched.reload_bytes,
+            "reload_saved_bytes": sched.reload_saved_bytes,
+            "coalesced_moves": sched.coalesced,
+            "event_log": c.event_digest(),
+        }
+
+    off, on = run(False), run(True)
+    return {
+        "reload_bytes_off": off["reload_bytes"],
+        "reload_bytes_on": on["reload_bytes"],
+        "reload_saved_bytes": on["reload_saved_bytes"],
+        "coalesced_moves": on["coalesced_moves"],
+        "served": on["served"],
+        "makespan_off": off["makespan"],
+        "makespan_on": on["makespan"],
+        "same_work": off["work"] == on["work"],
+        "ok": (on["reload_bytes"] < off["reload_bytes"]
+               and on["reload_saved_bytes"] > 0
+               and off["work"] == on["work"]
+               and on["makespan"] <= off["makespan"] * 1.05),
+        "event_log_on": on["event_log"],
+    }
+
+
+def share_sweep(*, seed: int, pairs=WEIGHT_PAIRS, **kw) -> List[Dict]:
+    rows = []
+    for pair in pairs:
+        r = run_share(pair, seed=seed, **kw)
+        rows.append(r)
+        print(f"compute weights {pair[0]:g}:{pair[1]:g}  "
+              f"accel-time {r['accel_time'][0]:6.3f}s/"
+              f"{r['accel_time'][1]:6.3f}s  "
+              f"ratio={r['share_ratio']:.2f} (want {r['weight_ratio']:.2f})  "
+              f"ok={r['ok']}")
+    return rows
+
+
+def write_json(path: str, shares: List[Dict], coalesce: Dict, *, seed: int,
+               shares_ok: bool, coalesce_ok: bool, determinism) -> None:
+    """BENCH_qos.json: the compute-tier QoS trajectory record."""
+    payload = {
+        "benchmark": "qos_compute",
+        "model": MODEL,
+        "seed": seed,
+        "shares_ok": shares_ok,        # accel time tracks weights <=10%
+        "coalesce_ok": coalesce_ok,    # strictly fewer reload bytes
+        "determinism": determinism,
+        "shares": [
+            {k: v for k, v in r.items() if k != "event_log"}
+            for r in shares
+        ],
+        "coalesce": {k: v for k, v in coalesce.items()
+                     if k != "event_log_on"},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check-determinism", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny 2-tenant sweep for `make check` "
+                         "(implies no JSON output)")
+    ap.add_argument("--out", default="BENCH_qos.json",
+                    help="machine-readable results path ('' disables)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        shares = share_sweep(seed=args.seed, pairs=[(2.0, 1.0)],
+                             n_samples=1500, object_size=125)
+        coalesce = run_coalesce(seed=args.seed, n_samples=1500)
+    else:
+        shares = share_sweep(seed=args.seed)
+        coalesce = run_coalesce(seed=args.seed)
+
+    shares_ok = all(r["ok"] for r in shares)
+    print(f"accelerator-time shares track compute weights within 10%: "
+          f"{shares_ok}")
+    print(f"coalescing 2-replica/1-model: reload "
+          f"{coalesce['reload_bytes_off'] / 1e9:.2f} GB -> "
+          f"{coalesce['reload_bytes_on'] / 1e9:.2f} GB "
+          f"(saved {coalesce['reload_saved_bytes'] / 1e9:.2f} GB, "
+          f"{coalesce['coalesced_moves']} moves)  makespan "
+          f"{coalesce['makespan_off']:.4f}s -> {coalesce['makespan_on']:.4f}s"
+          f"  ok={coalesce['ok']}")
+
+    same = None
+    if args.check_determinism:
+        again_share = run_share(WEIGHT_PAIRS[-1] if not args.smoke
+                                else (2.0, 1.0),
+                                seed=args.seed,
+                                **({"n_samples": 1500, "object_size": 125}
+                                   if args.smoke else {}))
+        again_coal = run_coalesce(seed=args.seed,
+                                  **({"n_samples": 1500}
+                                     if args.smoke else {}))
+        same = (again_share["event_log"] == shares[-1]["event_log"]
+                and again_coal["event_log_on"] == coalesce["event_log_on"])
+        print(f"determinism (seed {args.seed}): {same}")
+
+    if args.out and not args.smoke:
+        write_json(args.out, shares, coalesce, seed=args.seed,
+                   shares_ok=shares_ok, coalesce_ok=coalesce["ok"],
+                   determinism=same)
+    ok = shares_ok and coalesce["ok"] and same is not False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

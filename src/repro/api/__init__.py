@@ -18,9 +18,11 @@ Nothing outside this package should assemble ``Simulator`` +
 ``ObjectStore`` + ``HapiFleet`` wiring by hand.
 """
 from repro.api.policies import (
+    ComputeScheduler,
     DemandAwarePlacement,
     FabricAwareRouting,
     FabricAwareScaling,
+    FifoScheduling,
     LeastLoadedRouting,
     PLACEMENT_POLICIES,
     PlacementPolicy,
@@ -30,8 +32,11 @@ from repro.api.policies import (
     RoundRobinPlacement,
     RoutingPolicy,
     SCALING_POLICIES,
+    SCHEDULER_POLICIES,
     ScalingPolicy,
+    SchedulerPolicy,
     SloScaling,
+    WdrrScheduling,
 )
 from repro.cos.network import NetworkFabric, NetworkSpec
 
@@ -42,7 +47,9 @@ __all__ = list(_CLUSTER_EXPORTS) + [
     "FabricAwareRouting",
     "PlacementPolicy", "RoundRobinPlacement", "DemandAwarePlacement",
     "ScalingPolicy", "QueueDepthScaling", "SloScaling", "FabricAwareScaling",
+    "SchedulerPolicy", "WdrrScheduling", "FifoScheduling", "ComputeScheduler",
     "ROUTING_POLICIES", "PLACEMENT_POLICIES", "SCALING_POLICIES",
+    "SCHEDULER_POLICIES",
     "NetworkSpec", "NetworkFabric",
 ]
 

@@ -25,6 +25,7 @@ reproduces a byte-identical event log under any policy combination
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -34,7 +35,9 @@ from repro.api.policies import (
     PlacementPolicy,
     RoutingPolicy,
     ScalingPolicy,
+    SchedulerPolicy,
 )
+from repro.cos.scheduler import FifoScheduling, WdrrScheduling
 from repro.config import HapiConfig
 from repro.core.profiler import LayerProfile, profile_layered
 from repro.core.splitter import SplitDecision, choose_split
@@ -81,6 +84,17 @@ class TenantSpec:
     # on the WAN trunk and for its storage-tier reads). Only meaningful
     # on a cluster with a shared network fabric.
     network_weight: float = 1.0
+    # Service class on the *compute* side: weights the scheduler's
+    # deficit-round-robin dispatch and the tenant's Eq. 4 batch share
+    # when the COS accelerators, not the wire, are the scarce resource.
+    # None adopts the network weight, so one service class shapes both
+    # tiers unless explicitly decoupled.
+    compute_weight: Optional[float] = None
+
+    @property
+    def effective_compute_weight(self) -> float:
+        return self.network_weight if self.compute_weight is None \
+            else self.compute_weight
 
 
 @dataclass
@@ -162,7 +176,8 @@ class HapiCluster:
         self._n_servers = 2
         self._server_kwargs: Dict[str, Any] = {}
         self._storage_kwargs: Dict[str, Any] = {}
-        self._fair_queueing = True
+        self._scheduler: Optional[SchedulerPolicy] = None
+        self._coalescing = False
         self._routing: Optional[RoutingPolicy] = None
         self._placement: Optional[PlacementPolicy] = None
         self._scaling: Optional[ScalingPolicy] = None
@@ -203,8 +218,30 @@ class HapiCluster:
         return self
 
     def with_fair_queueing(self, enabled: bool) -> "HapiCluster":
-        self._check_mutable("with_fair_queueing")
-        self._fair_queueing = enabled
+        """Deprecated alias for :meth:`with_scheduler` (one release of
+        compat): True -> weighted deficit round-robin (the default),
+        False -> FIFO arrival order."""
+        warnings.warn(
+            "HapiCluster.with_fair_queueing is deprecated; use "
+            "with_scheduler(WdrrScheduling()) / "
+            "with_scheduler(FifoScheduling()) instead",
+            DeprecationWarning, stacklevel=2)
+        return self.with_scheduler(
+            WdrrScheduling() if enabled else FifoScheduling())
+
+    def with_scheduler(self, policy: Optional[SchedulerPolicy] = None, *,
+                       coalescing: Optional[bool] = None) -> "HapiCluster":
+        """Compute-tier scheduling: the dispatch/admission policy
+        (:class:`~repro.cos.scheduler.WdrrScheduling` weighted deficit
+        round-robin by default, :class:`~repro.cos.scheduler.FifoScheduling`
+        for arrival order) and the cross-server batch coalescer
+        (``coalescing=True`` ships queued requests to replicas already
+        holding their model loaded, cutting stateless reload bytes)."""
+        self._check_mutable("with_scheduler")
+        if policy is not None:
+            self._scheduler = policy
+        if coalescing is not None:
+            self._coalescing = coalescing
         return self
 
     def with_network(self, spec: Optional[NetworkSpec] = None,
@@ -288,7 +325,7 @@ class HapiCluster:
         store = ObjectStore(placement=self._placement, **self._storage_kwargs)
         self._fleet = HapiFleet(
             store, n_servers=self._n_servers, sim=sim,
-            fair_queueing=self._fair_queueing,
+            scheduler=self._scheduler, coalescing=self._coalescing,
             autoscale=self._autoscale,
             routing=self._routing, placement=self._placement,
             scaling=self._scaling,
@@ -377,8 +414,12 @@ class HapiCluster:
             train_fn=spec.train_fn, push_training=spec.push_training,
             resplit_every=spec.resplit_every,
             network_weight=spec.network_weight,
+            compute_weight=spec.effective_compute_weight,
             **extra,
         )
+        # Pin the tenant's compute class on the fleet scheduler so WDRR
+        # dispatch weights it even across re-issues and mixed workloads.
+        self._fleet.scheduler.set_weight(tid, spec.effective_compute_weight)
         handle = TenantHandle(spec=spec, client=client)
         self._tenants[tid] = handle
         return handle
@@ -413,14 +454,22 @@ class HapiCluster:
                      adaptable: bool = True,
                      limit: Optional[int] = None,
                      n_classes: int = 1000,
-                     network_weight: float = 1.0) -> List[int]:
+                     network_weight: float = 1.0,
+                     compute_weight: Optional[float] = None) -> List[int]:
         """Submit one POST per object of ``dataset`` (first ``limit`` of
         them if given) for ``tenant`` — the burst workload of the serving
         driver and the scaling benchmark. Arrival is a single seeded-RNG
         jitter per burst; the split is Alg. 1's unless given; ``b_max`` /
         ``adaptable=False`` pin the COS batch (the paper's BA-off
-        comparison). Returns the request ids."""
+        comparison); ``compute_weight`` is the burst's accelerator
+        service class (defaults to ``network_weight``, mirroring
+        :attr:`TenantSpec.compute_weight`). Returns the request ids."""
         self.build()
+        if compute_weight is None:
+            compute_weight = network_weight
+        if compute_weight <= 0:
+            raise ValueError(
+                f"compute weight must be > 0, got {compute_weight}")
         hapi = hapi or HapiConfig()
         prof = self.profile(model_key, n_classes)
         if split is None:
@@ -436,6 +485,7 @@ class HapiCluster:
                 split=split, object_name=oname, b_max=b_max, profile=prof,
                 arrival=arrival, compress=hapi.compress_transfer,
                 adaptable=adaptable, network_weight=network_weight,
+                compute_weight=compute_weight,
             )
             self._fleet.submit(req)
             ids.append(req.req_id)

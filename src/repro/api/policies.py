@@ -11,6 +11,10 @@ one service facade, swappable policy modules behind it.
   replicas, both at ``put_dataset`` time and (for demand-aware policies)
   as re-replication while the fleet runs.
 * :class:`ScalingPolicy` — when the fleet grows or shrinks.
+* :class:`~repro.cos.scheduler.SchedulerPolicy` — the compute-tier
+  dispatch order (weighted deficit round-robin vs FIFO); defined with
+  the :class:`~repro.cos.scheduler.ComputeScheduler` subsystem and
+  re-exported here with its registry.
 
 Every policy must be **deterministic**: decisions may depend only on
 fleet/store state reachable from the arguments (queue depths, demand
@@ -25,7 +29,15 @@ fleets leaks state between runs.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Protocol, Tuple, TYPE_CHECKING, runtime_checkable
+from typing import (Dict, List, Optional, Protocol, Tuple, TYPE_CHECKING,
+                    runtime_checkable)
+
+from repro.cos.scheduler import (
+    ComputeScheduler,
+    FifoScheduling,
+    SchedulerPolicy,
+    WdrrScheduling,
+)
 
 if TYPE_CHECKING:  # avoid import cycle: fleet imports this module
     from repro.cos.fleet import HapiFleet
@@ -158,26 +170,76 @@ class RoundRobinPlacement:
 
 @dataclass
 class DemandAwarePlacement:
-    """Demand-aware re-replication (ROADMAP): start round-robin, count
-    served POSTs per object, and when asked to rebalance add replicas for
-    the hottest under-replicated objects on the least-subscribed nodes.
+    """Demand-aware re-replication (ROADMAP: richer placement signals):
+    start round-robin, track per-object demand, and when asked to
+    rebalance add replicas for the hottest under-replicated objects on
+    the least-subscribed nodes — and *drop* the replicas this policy
+    created once their object's demand has gone cold.
+
+    Demand signal: each served POST contributes the bytes it served
+    (``act_bytes / byte_unit`` demand points) and the whole table decays
+    with a virtual-time half-life, so a burst of tiny objects cannot
+    outweigh a steady stream of large ones and yesterday's hot object
+    does not stay over-replicated forever. The original raw POST-count
+    behavior — no byte weighting, no decay, no cold-drop — is the
+    documented default-off path::
+
+        DemandAwarePlacement(weight_by_bytes=False,
+                             half_life=float("inf"), cold_threshold=0.0)
 
     ``max_new_per_round`` bounds churn per rebalance call;
-    ``hot_threshold`` is the minimum observed demand before an object is
-    worth another copy (cold data never spreads)."""
+    ``hot_threshold`` is the minimum demand before an object is worth
+    another copy (cold data never spreads); ``cold_threshold`` is where
+    a policy-added replica is dropped again (keep it below
+    ``hot_threshold`` for hysteresis)."""
 
     name: str = "demand-aware"
     max_new_per_round: int = 8
-    hot_threshold: int = 2
-    demand: Dict[str, int] = field(default_factory=dict)
+    hot_threshold: float = 2
+    weight_by_bytes: bool = True      # False = legacy raw POST counting
+    byte_unit: float = 1e6            # bytes served per demand point
+    half_life: float = 5.0            # virtual secs to halve; inf = no decay
+    cold_threshold: float = 0.5       # policy-added replicas drop below this
+    demand: Dict[str, float] = field(default_factory=dict)
+    _added: List[Tuple[str, int]] = field(default_factory=list)
+    _decayed_at: float = 0.0
 
     def initial(self, index: int, n_nodes: int, replication: int) -> List[int]:
         return [(index + r) % n_nodes for r in range(replication)]
 
     def observe(self, resp: "PostResponse") -> None:
-        self.demand[resp.object_name] = self.demand.get(resp.object_name, 0) + 1
+        inc = resp.act_bytes / self.byte_unit if self.weight_by_bytes else 1.0
+        self.demand[resp.object_name] = \
+            self.demand.get(resp.object_name, 0.0) + inc
+
+    def _decay_to(self, now: float) -> None:
+        """Exponential recency decay on the fleet's virtual clock —
+        deterministic because virtual time is."""
+        if now <= self._decayed_at:
+            return
+        if self.half_life != float("inf"):
+            f = 0.5 ** ((now - self._decayed_at) / self.half_life)
+            for k in self.demand:
+                self.demand[k] *= f
+        self._decayed_at = now
+
+    def _drop_cold(self, fleet: "HapiFleet") -> None:
+        """Remove replicas this policy added whose demand has decayed
+        below ``cold_threshold`` (never the object's last replica —
+        the store refuses that)."""
+        if not self.cold_threshold or not self._added:
+            return
+        kept: List[Tuple[str, int]] = []
+        for oname, node in self._added:
+            if self.demand.get(oname, 0.0) < self.cold_threshold:
+                fleet.store.remove_replica(oname, node, t=fleet._vtime)
+            else:
+                kept.append((oname, node))
+        self._added = kept
 
     def rebalance(self, fleet: "HapiFleet") -> List[Tuple[str, int]]:
+        self._decay_to(fleet._vtime)
+        self._drop_cold(fleet)
         # Called every scheduling round: bail out before building the
         # node-subscription map unless something is actually hot.
         if not any(c >= self.hot_threshold for c in self.demand.values()):
@@ -204,6 +266,7 @@ class DemandAwarePlacement:
             target = min(missing, key=lambda n: (holds[n], n))
             holds[target] += 1
             new.append((oname, target))
+        self._added.extend(new)
         return new
 
 
@@ -277,30 +340,64 @@ class SloScaling:
 
     Watches the queueing delay of recently served POSTs — exactly what the
     event log records — and scales up when the miss rate over the last
-    ``window`` responses exceeds ``up_miss_rate``. Scales down only when
-    the recent window is entirely within SLO *and* the fleet is idle
-    enough that a replica's queue is empty."""
+    ``window`` responses exceeds ``up_miss_rate``, *or* when the storage
+    tier's accelerators ran ``util_scale_up`` busy since the last
+    controller evaluation with work still waiting (``accel-util`` trace
+    events): a compute-saturated fleet is guaranteed to start missing
+    soon, so it grows before the misses accumulate instead of after
+    (ROADMAP: fold storage-node utilization into scaling). The signal is
+    *windowed* — busy-time accrued between evaluations over the virtual
+    time elapsed between them — so an idle hour does not dilute a fresh
+    saturating burst (which a lifetime mean would). ``util_scale_up=0``
+    disables the utilization path. Scales down only when the recent
+    window is entirely within SLO *and* the fleet is idle enough that a
+    replica's queue is empty."""
 
     name: str = "slo"
     min_servers: int = 1
     max_servers: int = 8
     slo_delay: float = 0.5          # seconds of queueing a POST may absorb
     up_miss_rate: float = 0.2       # >20% recent misses -> add a replica
+    util_scale_up: float = 0.9      # accel busy fraction that preempts misses
     window: int = 32                # responses considered "recent"
     cooldown_rounds: int = 4
     _delays: List[float] = field(default_factory=list)
     _cooldown: int = 0
+    _u_busy: float = 0.0            # busy-time snapshot at last evaluation
+    _u_vtime: float = 0.0           # virtual-time snapshot at last evaluation
 
     def observe(self, resp: "PostResponse") -> None:
         self._delays.append(resp.queue_delay)
         if len(self._delays) > self.window:
             del self._delays[: len(self._delays) - self.window]
 
+    def _recent_utilization(self, fleet: "HapiFleet") -> Optional[float]:
+        """Accelerator busy fraction since the last evaluation (None
+        until the virtual clock advances past the previous snapshot).
+        Reserve-ahead accounting can overshoot a window, so the value is
+        clamped to [0, 1]."""
+        accels = [a for s in fleet._alive() for a in s.accels]
+        busy = sum(a.busy_time for a in accels)
+        dt = fleet._vtime - self._u_vtime
+        if not accels or dt <= 0.0:
+            return None
+        util = (busy - self._u_busy) / (len(accels) * dt)
+        self._u_busy, self._u_vtime = busy, fleet._vtime
+        return min(max(util, 0.0), 1.0)
+
     def decide(self, fleet: "HapiFleet") -> int:
         if self._cooldown > 0:
             self._cooldown -= 1
             return 0
         routable = fleet.n_routable         # draining replicas aren't capacity
+        if (self.util_scale_up and routable < self.max_servers
+                and fleet.waiting_posts() > 0):
+            util = self._recent_utilization(fleet)
+            if util is not None and util >= self.util_scale_up:
+                fleet.sim.record(fleet._vtime, "accel-util",
+                                 f"{util:.3f} >= {self.util_scale_up:g}")
+                self._cooldown = self.cooldown_rounds
+                return +1
         if self._delays:
             misses = sum(1 for d in self._delays if d > self.slo_delay)
             rate = misses / len(self._delays)
@@ -352,6 +449,7 @@ class FabricAwareScaling(QueueDepthScaling):
 DEFAULT_ROUTING = ReplicaAwareRouting
 DEFAULT_PLACEMENT = RoundRobinPlacement
 DEFAULT_SCALING = QueueDepthScaling
+DEFAULT_SCHEDULER = WdrrScheduling
 
 # Name -> factory registries (CLI/config selection; factories accept the
 # dataclass fields of the respective policy as keyword arguments).
@@ -369,3 +467,17 @@ SCALING_POLICIES = {
     "slo": SloScaling,
     "fabric": FabricAwareScaling,
 }
+SCHEDULER_POLICIES = {
+    "wdrr": WdrrScheduling,
+    "fifo": FifoScheduling,
+}
+
+__all__ = [
+    "RoutingPolicy", "ReplicaAwareRouting", "LeastLoadedRouting",
+    "FabricAwareRouting",
+    "PlacementPolicy", "RoundRobinPlacement", "DemandAwarePlacement",
+    "ScalingPolicy", "QueueDepthScaling", "SloScaling", "FabricAwareScaling",
+    "SchedulerPolicy", "WdrrScheduling", "FifoScheduling", "ComputeScheduler",
+    "ROUTING_POLICIES", "PLACEMENT_POLICIES", "SCALING_POLICIES",
+    "SCHEDULER_POLICIES",
+]

@@ -32,6 +32,11 @@ class AdaptRequest:
     b_max: int                  # upper bound (client's training batch)
     b_min_override: int = 0     # >0: fixed floor (non-adaptable request —
                                 # ALL_IN_COS cannot decouple its batch, §5.1)
+    weight: float = 1.0         # service class: when HBM is scarce, higher
+                                # weights keep proportionally larger batches
+                                # and are the last dropped to the next round
+                                # (weight 1.0 everywhere is bitwise the
+                                # classic class-blind fill)
 
     def floor(self, b_min: int) -> int:
         if self.b_min_override:
@@ -71,21 +76,30 @@ def adapt_batches(
     def base_cost(rs) -> float:
         return sum(r.mem_model + r.floor(b_min) * r.mem_per_sample for r in rs)
 
-    # Admission: drop latest-arriving requests until the b_min config fits
-    # (paper: "removes one request at a time and retries").
+    # Admission: drop requests until the b_min config fits (paper:
+    # "removes one request at a time and retries"). Class-aware: the
+    # lowest-weight, latest-arriving request goes first — with all-equal
+    # weights this is exactly the historical latest-first drop.
     while reqs and base_cost(reqs) > budget:
-        dropped.append(reqs[-1].req_id)
-        reqs = reqs[:-1]
+        victim = min(range(len(reqs)), key=lambda i: (reqs[i].weight, -i))
+        dropped.append(reqs[victim].req_id)
+        reqs = reqs[:victim] + reqs[victim + 1:]
 
     batches = {r.req_id: r.floor(b_min) for r in reqs}
     used = base_cost(reqs)
 
-    # Water-fill: repeatedly grow the request with the lowest fill fraction.
+    # Water-fill: repeatedly grow the request with the lowest
+    # weight-scaled fill fraction, so at equilibrium a weight-w request
+    # sits w times higher in its [b_min, b_max] range than a weight-1
+    # one (division by weight 1.0 is exact: the classic fill, bitwise).
     while True:
         grew = False
         order = sorted(
             (r for r in reqs if batches[r.req_id] < r.b_max),
-            key=lambda r: (batches[r.req_id] / r.b_max, r.req_id),
+            # max() floors degenerate (<= 0) weights without touching
+            # valid ones — division by 1.0 stays exact.
+            key=lambda r: (batches[r.req_id] / r.b_max / max(r.weight, 1e-12),
+                           r.req_id),
         )
         for r in order:
             inc = min(step, r.b_max - batches[r.req_id])

@@ -109,6 +109,8 @@ class HapiClient:
         bw_ewma_alpha: float = 0.25,
         network_weight: Optional[float] = None,  # service class; None adopts
                                                  # the link's (1.0 otherwise)
+        compute_weight: Optional[float] = None,  # accelerator service class;
+                                                 # None adopts network_weight
     ) -> None:
         self.server = server
         if link is None:
@@ -121,6 +123,12 @@ class HapiClient:
         if network_weight is None:
             network_weight = getattr(link, "weight", 1.0)
         self.network_weight = float(network_weight)
+        self.compute_weight = float(self.network_weight
+                                    if compute_weight is None
+                                    else compute_weight)
+        if self.compute_weight <= 0:
+            raise ValueError(
+                f"compute weight must be > 0, got {self.compute_weight}")
         self.profile = profile
         self.hapi = hapi
         self.model_key = model_key
@@ -227,6 +235,7 @@ class HapiClient:
                 compress=self.hapi.compress_transfer,
                 adaptable=not self.push_training,
                 network_weight=self.network_weight,
+                compute_weight=self.compute_weight,
             ))
             self.server.submit(reqs[-1])
         responses = self.server.drain(now=t)
@@ -260,6 +269,7 @@ class HapiClient:
                         profile=dup.profile, arrival=d.arrival, compress=dup.compress,
                         adaptable=dup.adaptable,
                         network_weight=dup.network_weight,
+                        compute_weight=dup.compute_weight,
                     )
                     self.server.submit(dup)
                     # A shared fleet may drain unrelated pending requests

@@ -11,9 +11,18 @@ with:
 * **pluggable placement** — where object replicas live, including
   demand-aware re-replication while the fleet runs, is a
   :class:`~repro.api.policies.PlacementPolicy`;
-* **per-tenant fair queueing** — pending POSTs are kept in per-tenant
-  queues and dispatched round-robin across tenants, so one tenant's
-  burst cannot starve another;
+* **class-weighted scheduling** — pending POSTs are kept in per-tenant
+  queues inside a fleet-wide
+  :class:`~repro.cos.scheduler.ComputeScheduler` and released by a
+  pluggable :class:`~repro.cos.scheduler.SchedulerPolicy` (weighted
+  deficit round-robin on tenant compute weights by default; equal
+  weights are exactly the historical fair-queueing round-robin), so one
+  tenant's burst cannot starve another and gold tenants get
+  weight-proportional accelerator time;
+* **cross-server batch coalescing** — with ``coalescing=True`` the
+  scheduler ships queued requests for a model to a replica whose
+  accelerator already holds it loaded (active lease), cutting the
+  stateless per-request reload charge;
 * **kill/restart elasticity** — the fleet tracks which replica holds
   each in-flight request; when a replica dies its queue is lost
   (stateless crash) and the fleet re-issues the lost requests to the
@@ -43,9 +52,9 @@ assemble it by hand.
 """
 from __future__ import annotations
 
-from collections import deque
+import warnings
 from dataclasses import dataclass
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.api.policies import (
     PlacementPolicy,
@@ -57,6 +66,12 @@ from repro.api.policies import (
 )
 from repro.cos.clock import Simulator
 from repro.cos.objectstore import ObjectStore
+from repro.cos.scheduler import (
+    ComputeScheduler,
+    FifoScheduling,
+    SchedulerPolicy,
+    WdrrScheduling,
+)
 from repro.cos.server import HapiServer, PostRequest, PostResponse
 
 
@@ -112,11 +127,13 @@ class HapiFleet:
         *,
         sim: Optional[Simulator] = None,
         seed: int = 0,
-        fair_queueing: bool = True,
+        fair_queueing: Optional[bool] = None,
         autoscale: Optional[AutoscalePolicy] = None,
         routing: Optional[RoutingPolicy] = None,
         placement: Optional[PlacementPolicy] = None,
         scaling: Optional[ScalingPolicy] = None,
+        scheduler: Optional[Union[SchedulerPolicy, ComputeScheduler]] = None,
+        coalescing: Optional[bool] = None,
         **server_kwargs,
     ) -> None:
         self.sim = sim if sim is not None else Simulator(seed)
@@ -125,6 +142,27 @@ class HapiFleet:
         if scaling is None and autoscale is not None:
             scaling = autoscale.to_policy()
         self.scaling: Optional[ScalingPolicy] = scaling
+        # Admission/dispatch live in the ComputeScheduler subsystem
+        # (weighted deficit-round-robin by default — byte-identical to
+        # the historical fair-queueing round-robin at equal weights).
+        # `fair_queueing=` is the deprecated boolean alias for the
+        # scheduler policy: True -> WDRR, False -> FIFO.
+        if fair_queueing is not None:
+            warnings.warn(
+                "HapiFleet(fair_queueing=...) is deprecated; pass "
+                "scheduler=WdrrScheduling() (the default) or "
+                "scheduler=FifoScheduling() instead",
+                DeprecationWarning, stacklevel=2)
+            if scheduler is None:
+                scheduler = (WdrrScheduling() if fair_queueing
+                             else FifoScheduling())
+        if isinstance(scheduler, ComputeScheduler):
+            self.scheduler = scheduler
+            if coalescing is not None:       # explicit flag wins either way
+                self.scheduler.coalescing = coalescing
+        else:
+            self.scheduler = ComputeScheduler(scheduler,
+                                              coalescing=bool(coalescing))
         # Placement precedence: explicit arg, then whatever the store was
         # built with, then the static default. The chosen policy is pushed
         # back onto the store so later put_dataset calls agree with it.
@@ -135,13 +173,11 @@ class HapiFleet:
         self._server_kwargs = dict(server_kwargs)
         self._executors: Dict[str, Callable] = {}
         self.servers: List[HapiServer] = [
-            HapiServer(store, server_id=i, sim=self.sim, **server_kwargs)
+            HapiServer(store, server_id=i, sim=self.sim,
+                       scheduler=self.scheduler, **server_kwargs)
             for i in range(n_servers)
         ]
-        self.fair_queueing = fair_queueing
         self.cordoned: set = set()                   # server ids draining out
-        # Per-tenant FIFO queues, dispatched round-robin by tenant id.
-        self._pending: Dict[int, Deque[PostRequest]] = {}
         self._inflight: Dict[int, int] = {}          # req_id -> server index
         self._req_by_id: Dict[int, PostRequest] = {}
         self.reissued = 0
@@ -190,6 +226,12 @@ class HapiFleet:
         return getattr(self.store, "fabric", None)
 
     @property
+    def fair_queueing(self) -> bool:
+        """Deprecated alias (one release of compat): does the dispatch
+        policy interleave tenants? Tenant-spreading routers read this."""
+        return self.scheduler.policy.fair
+
+    @property
     def adapt_results(self):
         return [r for s in self.servers for r in s.adapt_results]
 
@@ -199,9 +241,22 @@ class HapiFleet:
 
     def waiting_posts(self) -> int:
         """Scaling signal: POSTs not yet being executed — pending at the
-        fleet plus queued on alive replicas."""
-        return sum(len(q) for q in self._pending.values()) + \
+        scheduler plus queued on alive replicas."""
+        return self.scheduler.pending_total() + \
             sum(s.queue_depth() for s in self._alive())
+
+    def accel_utilization(self) -> float:
+        """Lifetime mean busy fraction of the alive replicas'
+        accelerators over the fleet's elapsed virtual time — a coarse
+        report-level saturation metric. Scaling decisions should window
+        it instead (``SloScaling`` snapshots busy-time between
+        controller evaluations so an idle stretch cannot dilute a fresh
+        saturating burst)."""
+        accels = [a for s in self._alive() for a in s.accels]
+        if not accels or self._vtime <= 0.0:
+            return 0.0
+        busy = sum(min(a.busy_time, self._vtime) for a in accels)
+        return busy / (len(accels) * self._vtime)
 
     # -- live execution --------------------------------------------------------
     def register_executor(self, model_key: str, fn: Callable) -> None:
@@ -245,7 +300,7 @@ class HapiFleet:
                 self.sim.record(self._vtime, "scale-up", f"s{s.server_id}")
                 return s
         s = HapiServer(self.store, server_id=len(self.servers), sim=self.sim,
-                       **self._server_kwargs)
+                       scheduler=self.scheduler, **self._server_kwargs)
         for key, fn in self._executors.items():
             s.register_executor(key, fn)
         self.servers.append(s)
@@ -291,31 +346,16 @@ class HapiFleet:
         if not self.alive:
             raise ConnectionError("hapi fleet down")
         self._req_by_id[req.req_id] = req
-        self._pending.setdefault(req.tenant, deque()).append(req)
+        self.scheduler.enqueue(req)
         ts = self.tenant_stats.setdefault(req.tenant, TenantStats())
         ts.first_arrival = min(ts.first_arrival, req.arrival)
         self.sim.record(req.arrival, "post", f"t{req.tenant} {req.object_name}")
 
     def dispatch(self) -> int:
-        """Move pending requests onto replicas, round-robin across tenants
-        (fair queueing) or in submission order. Returns #dispatched."""
-        n = 0
-        if self.fair_queueing:
-            while any(self._pending.values()):
-                for tenant in sorted(self._pending):
-                    q = self._pending[tenant]
-                    if not q:
-                        continue
-                    n += self._dispatch_one(q.popleft())
-        else:
-            rest = sorted(
-                (r for q in self._pending.values() for r in q),
-                key=lambda r: (r.arrival, r.req_id),
-            )
-            self._pending.clear()
-            for req in rest:
-                n += self._dispatch_one(req)
-        return n
+        """Move pending requests onto replicas in scheduler-policy order
+        (weighted deficit round-robin across tenants by default; FIFO
+        keeps submission order). Returns #dispatched."""
+        return self.scheduler.dispatch(self)
 
     def _dispatch_one(self, req: PostRequest) -> int:
         alive = self._routable()
@@ -334,7 +374,7 @@ class HapiFleet:
         for rid in lost:
             req = self._req_by_id[rid]
             del self._inflight[rid]
-            self._pending.setdefault(req.tenant, deque()).append(req)
+            self.scheduler.enqueue(req)
             self.reissued += 1
             self.sim.record(self._vtime, "reissue",
                             f"t{req.tenant} {req.object_name}")
@@ -354,7 +394,7 @@ class HapiFleet:
             while s.queue_depth() > target:
                 req = s.queue.pop()               # newest queued first
                 self._inflight.pop(req.req_id, None)
-                self._pending.setdefault(req.tenant, deque()).append(req)
+                self.scheduler.enqueue(req)
                 moved += 1
         if moved:
             self.sim.record(self._vtime, "rebalance", f"moved={moved}")
@@ -383,7 +423,7 @@ class HapiFleet:
 
     # -- serving ----------------------------------------------------------------
     def _work_remains(self) -> bool:
-        return bool(self._inflight) or any(self._pending.values())
+        return bool(self._inflight) or self.scheduler.has_pending()
 
     def drain(self, now: float = 0.0) -> List[PostResponse]:
         """Serve everything pending/in-flight across the fleet.
@@ -407,6 +447,7 @@ class HapiFleet:
             self._autoscale_step()
             self._retire_drained()     # cordoned replicas that ran dry
             self._re_replicate()       # placement tick: demand-aware
+            self.scheduler.coalesce(self)   # warm-replica consolidation
             active = [s for s in self._alive() if s.queue]
             if not active:
                 # in-flight on dead replicas only: loop re-issues them
@@ -427,10 +468,13 @@ class HapiFleet:
                 if self._inflight[rid] == sidx and rid not in queued_ids:
                     del self._inflight[rid]
                     self.rejected.append(rid)
-        # Controller tick on the now-idle fleet (lets scale-down happen
-        # between traffic bursts, not only under load).
+        # Controller tick on the now-idle fleet (lets scale-down and
+        # demand-aware re-replication happen between traffic bursts, not
+        # only under load — a burst served in one round still updates
+        # placement for the next one).
         self._autoscale_step()
         self._retire_drained()
+        self._re_replicate()
         return responses
 
     def _account(self, resp: PostResponse) -> None:

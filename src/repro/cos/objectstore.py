@@ -122,6 +122,20 @@ class ObjectStore:
                             f"{oname} -> {self.nodes[node].name}")
         return True
 
+    def remove_replica(self, oname: str, node: int, t: float = 0.0) -> bool:
+        """Drop one replica of ``oname`` from ``node`` (demand-aware
+        cold-replica reclamation). Refuses to drop the last replica;
+        free — deleting local data moves no bytes."""
+        node = node % len(self.nodes)
+        reps = self._placement[oname]
+        if node not in reps or len(reps) <= 1:
+            return False
+        reps.remove(node)
+        if self.sim is not None:
+            self.sim.record(t, "store.unreplicate",
+                            f"{oname} -/- {self.nodes[node].name}")
+        return True
+
     # -- storage request (proxy <- storage node) ------------------------------
     def read(self, oname: str, t: float) -> Tuple[StoredObject, float]:
         """Returns (object, time_ready). Reads from the least-busy replica."""

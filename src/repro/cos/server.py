@@ -30,6 +30,7 @@ from repro.core.batch_adapt import AdaptRequest, AdaptResult, adapt_batches
 from repro.core.profiler import LayerProfile
 from repro.cos.clock import Accelerator, EventLog, Simulator
 from repro.cos.objectstore import ObjectStore
+from repro.cos.scheduler import ComputeScheduler
 
 
 @dataclass
@@ -45,6 +46,8 @@ class PostRequest:
     compress: bool = False
     adaptable: bool = True      # False: ALL_IN_COS — batch cannot shrink
     network_weight: float = 1.0  # tenant service class (weighted fabric share)
+    compute_weight: float = 1.0  # tenant service class on the accelerators
+                                 # (WDRR dispatch + class-aware Eq. 4)
 
 
 @dataclass
@@ -70,6 +73,11 @@ class _Lease:
     end: float
     nbytes: float
     accel: int
+    # What the lease holds resident: while active, requests for the same
+    # model with a split no deeper than `split` find the weights already
+    # in HBM — the coalescer's "warm replica" signal.
+    model_key: str = ""
+    split: int = 0
 
 
 class HapiServer:
@@ -85,8 +93,13 @@ class HapiServer:
         mxu_efficiency: float = 0.4,
         server_id: int = 0,
         sim: Optional[Simulator] = None,
+        scheduler: Optional[ComputeScheduler] = None,
     ) -> None:
         self.store = store
+        # Admission/dispatch live in the ComputeScheduler subsystem; a
+        # fleet shares one across its replicas, a bare server owns one.
+        self.scheduler = scheduler if scheduler is not None \
+            else ComputeScheduler()
         self.server_id = server_id
         self.sim = sim
         self.accels = [
@@ -158,84 +171,24 @@ class HapiServer:
         return responses
 
     def drain_round(self, now: float = 0.0) -> Tuple[List[PostResponse], float]:
-        """One coalescing-window + batch-adaptation scheduling round.
+        """One coalescing-window + batch-adaptation scheduling round,
+        delegated to the :class:`~repro.cos.scheduler.ComputeScheduler`
+        (which owns wait-window admission, class-aware Eq. 4 planning
+        and queue-order execution).
 
         Returns ``(responses, next_now)``. The fleet steps replicas one
         round at a time so control events (kills, restarts, autoscaling)
         interleave with serving in deterministic event order; a bare
         server just loops this inside :meth:`drain`.
         """
-        if not self.queue or not self.alive:
-            return [], now
-        responses: List[PostResponse] = []
-        t = max(now, min(r.arrival for r in self.queue)) + self.wait_window
-        self._free_expired(t)
-        arrived = [r for r in self.queue if r.arrival <= t]
-        if not arrived:
-            return [], min(r.arrival for r in self.queue)
+        return self.scheduler.server_round(self, now)
 
-        # Distribute evenly over accelerators (paper §5.5), adapt per accel.
-        per_accel: Dict[int, List[PostRequest]] = {}
-        for r in arrived:
-            idx = self._rr % len(self.accels)
-            self._rr += 1
-            per_accel.setdefault(idx, []).append(r)
-
-        progressed = False
-        planned = []            # (queue_position, req, batch, mem, accel)
-        pos = {r.req_id: i for i, r in enumerate(arrived)}
-        for ai, reqs in per_accel.items():
-            accel = self.accels[ai]
-            budget = accel.hbm - accel.mem_used
-            adapt_reqs = [
-                AdaptRequest(
-                    req_id=r.req_id,
-                    mem_per_sample=self._mem_per_sample(r),
-                    mem_model=r.profile.prefix_param_bytes[r.split],
-                    b_max=r.b_max,
-                    b_min_override=0 if r.adaptable else r.b_max,
-                )
-                for r in reqs
-            ]
-            res = adapt_batches(adapt_reqs, budget, b_min=self.b_min)
-            self.adapt_results.append(res)
-            by_id = {r.req_id: r for r in reqs}
-            for a in res.assignments:
-                req = by_id[a.req_id]
-                planned.append((pos[req.req_id], req, a.batch, a.mem, ai))
-            # dropped requests stay queued for the next round
-        # Execute in queue order (not accelerator-major): admitted requests
-        # hit the shared storage nodes in their arrival interleaving, so one
-        # accelerator's batch cannot monopolize the read path.
-        ordered = sorted(planned, key=lambda p: p[0])
-        # Batch window: the round's storage reads resolve as one
-        # transfer_concurrent batch (weighted by tenant class) whenever
-        # they would actually share a storage link; read_batch returns
-        # None otherwise and each request reads on its own, exactly as
-        # before.
-        reads = self.store.read_batch(
-            [p[1].object_name for p in ordered], t,
-            [p[1].network_weight for p in ordered]) if len(ordered) > 1 \
-            else None
-        for i, (_, req, batch, mem, ai) in enumerate(ordered):
-            resp = self._execute(req, batch, mem, ai, t,
-                                 pre_read=reads[i] if reads else None)
-            responses.append(resp)
-            self.queue.remove(req)
-            progressed = True
-
-        if not progressed:
-            # Nothing fit: wait for the earliest lease to expire.
-            if self.leases:
-                now = min(l.end for l in self.leases)
-            else:  # pathological: shrink by dropping the newest request
-                victim = max(arrived, key=lambda r: r.arrival)
-                self.queue.remove(victim)
-                self.log.add(t, "reject", victim.object_name)
-                if self.sim is not None:
-                    self.sim.record(t, "reject",
-                                    f"s{self.server_id} {victim.object_name}")
-        return responses, now
+    def adapt(self, requests: List[AdaptRequest], budget: float) -> AdaptResult:
+        """Run Eq. 4 batch adaptation for one accelerator's round with
+        this server's floor, recording the result (Table 5 stats)."""
+        res = adapt_batches(requests, budget, b_min=self.b_min)
+        self.adapt_results.append(res)
+        return res
 
     def _mem_per_sample(self, req: PostRequest) -> float:
         """Forward working set; if training layers are pushed down
@@ -250,7 +203,8 @@ class HapiServer:
 
     def _execute(self, req: PostRequest, cos_batch: int, mem: float,
                  accel_idx: int, t: float,
-                 pre_read: Optional[Tuple[Any, float]] = None) -> PostResponse:
+                 pre_read: Optional[Tuple[Any, float]] = None,
+                 charge_load: bool = True) -> PostResponse:
         accel = self.accels[accel_idx]
         obj, t_data = pre_read if pre_read is not None \
             else self.store.read(req.object_name, t)
@@ -265,8 +219,10 @@ class HapiServer:
         flops = prof.cum_flops[fz] * n
         if req.split > fz:
             flops += 3.0 * (prof.cum_flops[req.split] - prof.cum_flops[fz]) * n
-        # Stateless model (re)load charged as HBM writes.
-        load_time = prof.prefix_param_bytes[req.split] / HW.hbm_bandwidth
+        # Stateless model (re)load charged as HBM writes — skipped when
+        # the coalescer found the model warm on this accelerator.
+        load_time = (prof.prefix_param_bytes[req.split] / HW.hbm_bandwidth
+                     if charge_load else 0.0)
         eff = self.mxu_efficiency if self.decoupled else self.mxu_efficiency * 0.55
         # Small COS batches under-fill the MXU (replaces paper assumption 4).
         eff *= min(1.0, cos_batch / 128.0)
@@ -282,7 +238,8 @@ class HapiServer:
             f"batch adaptation overcommitted {accel.name}: "
             f"alloc {mem:.3e} B with {accel.mem_used:.3e}/{accel.hbm:.3e} used"
         )
-        self.leases.append(_Lease(end=end, nbytes=mem, accel=accel_idx))
+        self.leases.append(_Lease(end=end, nbytes=mem, accel=accel_idx,
+                                  model_key=req.model_key, split=req.split))
 
         acts = None
         act_bytes = prof.out_bytes[req.split] * n

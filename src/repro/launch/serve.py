@@ -29,6 +29,16 @@ proportion. ``--scaling fabric`` / ``--routing fabric-aware`` select the
 network-aware fleet policies (scale-ups are held while the WAN trunk,
 not compute, is the bottleneck; routing prefers replicas whose storage
 ingress is idle).
+
+``--scheduler wdrr|fifo`` selects the compute-tier dispatch policy,
+``--tenant-compute-weight 4,1`` assigns accelerator service classes
+(WDRR dispatch + class-aware Eq. 4 batch shares; defaults to the
+network weights), and ``--coalesce`` turns on cross-server batch
+coalescing (queued requests ship to replicas already holding their
+model loaded, cutting stateless reload bytes):
+
+    PYTHONPATH=src python -m repro.launch.serve --cos-fleet 2 \\
+        --tenants 2 --scheduler wdrr --tenant-compute-weight 4,1 --coalesce
 """
 from __future__ import annotations
 
@@ -100,13 +110,18 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
                     max_servers: int = 8, autoscale: bool = True,
                     routing: str = "replica-aware",
                     placement: str = "round-robin",
-                    scaling: str = "queue-depth"):
+                    scaling: str = "queue-depth",
+                    scheduler: str = "wdrr",
+                    coalesce: bool = False,
+                    compute_weights=None):
     """Drive a HAPI deployment through the :class:`repro.api.HapiCluster`
     facade with a multi-tenant burst workload and report served
     throughput per replica and per tenant. ``routing``/``placement``/
-    ``scaling`` select fleet policies by registry name."""
+    ``scaling``/``scheduler`` select fleet policies by registry name;
+    ``compute_weights`` assigns accelerator service classes (cycled over
+    tenants), ``coalesce`` turns on cross-server batch coalescing."""
     from repro.api import (HapiCluster, PLACEMENT_POLICIES, ROUTING_POLICIES,
-                           SCALING_POLICIES)
+                           SCALING_POLICIES, SCHEDULER_POLICIES)
     from repro.models.vision import PAPER_MODELS
 
     cluster = (HapiCluster(seed=seed)
@@ -114,14 +129,18 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
                              flops_per_accel=65e12)
                .with_dataset("serve", content_seed=seed)
                .with_routing(ROUTING_POLICIES[routing]())
-               .with_placement(PLACEMENT_POLICIES[placement]()))
+               .with_placement(PLACEMENT_POLICIES[placement]())
+               .with_scheduler(SCHEDULER_POLICIES[scheduler](),
+                               coalescing=coalesce))
     if autoscale:
         cluster.with_scaling(SCALING_POLICIES[scaling](
             min_servers=1, max_servers=max_servers))
     names = list(PAPER_MODELS)
+    weights = compute_weights or [1.0]
     for t in range(n_tenants):
         cluster.submit_burst("serve", names[t % len(names)], tenant=t,
-                             train_batch=1000)
+                             train_batch=1000,
+                             compute_weight=weights[t % len(weights)])
     responses = cluster.drain()
     report = cluster.report()
     return {
@@ -131,6 +150,8 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
         "served_by_server": report.served_by_server,
         "tenant_throughput": report.tenant_throughput,
         "scale_events": report.scale_events,
+        "reload_bytes": cluster.fleet.scheduler.reload_bytes,
+        "reload_saved_bytes": cluster.fleet.scheduler.reload_saved_bytes,
     }
 
 
@@ -141,16 +162,19 @@ def serve_cos_contended(n_servers: int, *, n_tenants: int = 4, seed: int = 0,
                         routing: str = "replica-aware",
                         placement: str = "round-robin",
                         scaling: str = "queue-depth",
-                        weights=None):
+                        scheduler: str = "wdrr", coalesce: bool = False,
+                        weights=None, compute_weights=None):
     """Co-scheduled tenant epochs on a shared WAN egress trunk: every
     tenant's activation pulls are flows contending under weighted
     max-min fair sharing, and each client re-decides its split from the
     measured bandwidth EWMA (``resplit_every`` iterations). Fleet
     policies are selected by registry name, exactly like
-    :func:`serve_cos_fleet`; ``weights`` assigns per-tenant service
-    classes (cycled over tenants; all 1.0 when None)."""
+    :func:`serve_cos_fleet`; ``weights`` assigns per-tenant network
+    service classes, ``compute_weights`` the accelerator classes (both
+    cycled over tenants; compute follows network when None)."""
     from repro.api import (HapiCluster, NetworkSpec, PLACEMENT_POLICIES,
-                           ROUTING_POLICIES, SCALING_POLICIES, TenantSpec)
+                           ROUTING_POLICIES, SCALING_POLICIES,
+                           SCHEDULER_POLICIES, TenantSpec)
     from repro.config import HapiConfig
 
     bw = trunk_gbps * 1e9 / 8
@@ -161,7 +185,9 @@ def serve_cos_contended(n_servers: int, *, n_tenants: int = 4, seed: int = 0,
                              content_seed=seed)
                .with_network(NetworkSpec(trunk_bandwidth=bw))
                .with_routing(ROUTING_POLICIES[routing]())
-               .with_placement(PLACEMENT_POLICIES[placement]()))
+               .with_placement(PLACEMENT_POLICIES[placement]())
+               .with_scheduler(SCHEDULER_POLICIES[scheduler](),
+                               coalescing=coalesce))
     if autoscale:
         cluster.with_scaling(SCALING_POLICIES[scaling](
             min_servers=1, max_servers=max_servers))
@@ -169,7 +195,9 @@ def serve_cos_contended(n_servers: int, *, n_tenants: int = 4, seed: int = 0,
     handles = [cluster.tenant(TenantSpec(
         model="alexnet", hapi=HapiConfig(network_bandwidth=bw),
         client_flops=197e12, resplit_every=resplit_every,
-        network_weight=weights[i % len(weights)]))
+        network_weight=weights[i % len(weights)],
+        compute_weight=(compute_weights[i % len(compute_weights)]
+                        if compute_weights else None)))
         for i in range(n_tenants)]
     results = cluster.run_epochs([(h, "serve", train_batch) for h in handles])
     tenants = []
@@ -208,8 +236,16 @@ def main(argv=None):
                     help="per-tenant QoS weights, cycled over tenants "
                          "(e.g. '2,1' = gold/bronze); only meaningful "
                          "with --network-trunk")
+    ap.add_argument("--tenant-compute-weight", default="", metavar="W[,W...]",
+                    help="per-tenant accelerator service classes, cycled "
+                         "over tenants (defaults to --tenant-weight: one "
+                         "class shapes both tiers)")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="cross-server batch coalescing: ship queued "
+                         "requests to replicas already holding their "
+                         "model loaded (cuts stateless reload bytes)")
     from repro.api import (PLACEMENT_POLICIES, ROUTING_POLICIES,
-                           SCALING_POLICIES)
+                           SCALING_POLICIES, SCHEDULER_POLICIES)
 
     ap.add_argument("--routing", default="replica-aware",
                     choices=sorted(ROUTING_POLICIES))
@@ -217,7 +253,11 @@ def main(argv=None):
                     choices=sorted(PLACEMENT_POLICIES))
     ap.add_argument("--scaling", default="queue-depth",
                     choices=sorted(SCALING_POLICIES))
+    ap.add_argument("--scheduler", default="wdrr",
+                    choices=sorted(SCHEDULER_POLICIES))
     args = ap.parse_args(argv)
+    cweights = ([float(w) for w in args.tenant_compute_weight.split(",")]
+                if args.tenant_compute_weight else None)
     if args.cos_fleet and args.network_trunk > 0:
         weights = ([float(w) for w in args.tenant_weight.split(",")]
                    if args.tenant_weight else None)
@@ -229,7 +269,10 @@ def main(argv=None):
                                   routing=args.routing,
                                   placement=args.placement,
                                   scaling=args.scaling,
-                                  weights=weights)
+                                  scheduler=args.scheduler,
+                                  coalesce=args.coalesce,
+                                  weights=weights,
+                                  compute_weights=cweights)
         print(f"shared trunk {args.network_trunk:.2f} Gbps, "
               f"{len(out['tenants'])} tenants:")
         for t in out["tenants"]:
@@ -244,9 +287,15 @@ def main(argv=None):
         out = serve_cos_fleet(args.cos_fleet, n_tenants=args.tenants,
                               seed=args.seed, max_servers=args.max_servers,
                               routing=args.routing, placement=args.placement,
-                              scaling=args.scaling)
+                              scaling=args.scaling, scheduler=args.scheduler,
+                              coalesce=args.coalesce,
+                              compute_weights=cweights)
         print(f"served {out['served']} POSTs in {out['makespan']:.3f}s "
               f"({out['n_alive']} replicas alive)")
+        if args.coalesce:
+            print(f"stateless reloads: {out['reload_bytes'] / 1e9:.2f} GB "
+                  f"charged, {out['reload_saved_bytes'] / 1e9:.2f} GB "
+                  f"saved by coalescing")
         print(f"per-server: {out['served_by_server']}")
         for t, thr in out["tenant_throughput"].items():
             print(f"tenant {t}: {thr:10.1f} samples/s")

@@ -158,7 +158,7 @@ def test_fair_queueing_interleaves_tenants(prof):
     ahead of the first tenant's deep backlog."""
     store = make_store(n=8000)
     objects = store.object_names("ds")
-    fleet = HapiFleet(store, n_servers=1, seed=0, fair_queueing=True)
+    fleet = HapiFleet(store, n_servers=1, seed=0)   # WDRR default == fair
     burst(fleet, prof, objects, tenants=(0,))             # deep backlog
     burst(fleet, prof, objects[:4], tenants=(1,), rid0=5000)
     responses = fleet.drain()

@@ -1,0 +1,547 @@
+"""Compute-tier scheduler tests (ComputeScheduler subsystem).
+
+* golden byte-compat: the default WDRR scheduler reproduces the
+  pre-refactor ``drain_round``/``dispatch`` event logs byte-for-byte
+  (sha256 of the event digests, captured on the commit before the
+  scheduler extraction);
+* property: WDRR with all-equal weights is *identical* to the
+  historical round-robin dispatch order;
+* class-weighted behavior: WDRR 4:1 interleave, class-aware Eq. 4
+  batch shares and drop order;
+* cross-server batch coalescing: reload bytes strictly drop, and
+  coalesced requests never violate Eq. 4's no-OOM invariant on the
+  receiving replica;
+* deprecated ``fair_queueing`` aliases still work (one release);
+* richer placement/scaling signals (bytes+recency demand with
+  cold-replica drop; accelerator-utilization scale-up).
+"""
+import hashlib
+from collections import deque
+from dataclasses import dataclass
+
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # pragma: no cover - env dependent
+    import _propcheck as st
+    from _propcheck import given, settings
+
+from repro.api import (
+    DemandAwarePlacement,
+    HapiCluster,
+    SloScaling,
+    TenantSpec,
+)
+from repro.core.batch_adapt import AdaptRequest, adapt_batches
+from repro.core.profiler import profile_layered
+from repro.cos.fleet import HapiFleet
+from repro.cos.objectstore import synthetic_image_store
+from repro.cos.scheduler import (
+    ComputeScheduler,
+    FifoScheduling,
+    WdrrScheduling,
+    windowed_accel_share,
+)
+from repro.cos.server import HapiServer, PostRequest
+from repro.models.vision import alexnet
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return profile_layered(alexnet(100))
+
+
+def _digest_hash(digest):
+    h = hashlib.sha256()
+    for item in digest:
+        h.update(repr(item).encode())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Golden byte-compat: default scheduler == pre-refactor event logs
+# ---------------------------------------------------------------------------
+GOLDEN_BURST = \
+    "ec0ed98f06bb7080ab57881ebe5cb6328283acd6df96e9f356f2ad81690501a3"
+GOLDEN_EPOCH = \
+    "7f81daeb60d76e9f9aee4cd616f81979d5f402fe1eefe4ff0d731e46bd676876"
+GOLDEN_BARE = \
+    "f91b4332e55c406497eb816d8961ad00aa2371997d2105901830473f7fe96b6f"
+
+
+def test_golden_fleet_burst_log_byte_identical():
+    """Default-config fleet drain (WDRR, equal weights, coalescing off)
+    reproduces the event log of the pre-refactor hard-coded
+    dispatch/drain_round, hash-for-hash."""
+    c = (HapiCluster(seed=11)
+         .with_servers(2)
+         .with_storage(n_nodes=4, replication=2)
+         .with_dataset("ds", n_samples=2000, object_size=500, n_classes=100))
+    c.submit_burst("ds", "alexnet", tenant=0, n_classes=100)
+    c.submit_burst("ds", "alexnet", tenant=1, n_classes=100)
+    c.drain()
+    assert _digest_hash(c.event_digest()) == GOLDEN_BURST
+
+
+def test_golden_tenant_epoch_log_byte_identical():
+    c = (HapiCluster(seed=3)
+         .with_servers(2, n_accelerators=2, flops_per_accel=65e12)
+         .with_dataset("imagenet", n_samples=2000, n_classes=100))
+    t = c.tenant(TenantSpec(model="alexnet", bandwidth=1e9 / 8,
+                            client_flops=65e12, n_classes=100))
+    t.run_epoch("imagenet", train_batch=1000, max_iterations=2)
+    assert _digest_hash(c.event_digest()) == GOLDEN_EPOCH
+
+
+def test_golden_bare_server_drain_byte_identical(prof):
+    """A bare HapiServer (private scheduler) serves exactly as the old
+    in-class drain_round did: same batches, same timestamps."""
+    store = synthetic_image_store("ds", n_samples=2000, object_size=500,
+                                  n_classes=100)
+    srv = HapiServer(store, n_accelerators=2)
+    for i, oname in enumerate(store.object_names("ds")):
+        srv.submit(PostRequest(i, 0, "alexnet", 5, oname, 500, prof, 0.0))
+    resp = srv.drain()
+    payload = tuple((r.req_id, r.cos_batch, r.started, r.finished)
+                    for r in resp) + srv.log.digest()
+    assert _digest_hash(payload) == GOLDEN_BARE
+
+
+# ---------------------------------------------------------------------------
+# WDRR dispatch order
+# ---------------------------------------------------------------------------
+@dataclass
+class _Req:
+    req_id: int
+    tenant: int
+    arrival: float = 0.0
+    compute_weight: float = 1.0
+
+
+def _legacy_round_robin(pending):
+    """The pre-refactor HapiFleet.dispatch fair-queueing loop."""
+    out = []
+    while any(pending.values()):
+        for tenant in sorted(pending):
+            q = pending[tenant]
+            if not q:
+                continue
+            out.append(q.popleft())
+    return out
+
+
+def _queues(lengths):
+    rid = 0
+    pending = {}
+    for t, n in enumerate(lengths):
+        q = deque()
+        for _ in range(n):
+            q.append(_Req(rid, t))
+            rid += 1
+        pending[t] = q
+    return pending
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    lengths=st.lists(st.integers(0, 7), min_size=1, max_size=6),
+    weight=st.floats(0.25, 8.0),
+)
+def test_wdrr_equal_weights_is_round_robin(lengths, weight):
+    """All-equal compute weights (of any magnitude) dispatch in exactly
+    the historical round-robin order — the property behind the golden
+    byte-compat tests."""
+    a, b = _queues(lengths), _queues(lengths)
+    got = WdrrScheduling().order(a, {t: weight for t in a})
+    want = _legacy_round_robin(b)
+    assert [(r.tenant, r.req_id) for r in got] == \
+        [(r.tenant, r.req_id) for r in want]
+
+
+def test_wdrr_weighted_interleave_4_to_1():
+    pending = _queues([8, 8])
+    out = WdrrScheduling().order(pending, {0: 4.0, 1: 1.0})
+    assert len(out) == 16
+    first = [r.tenant for r in out[:5]]
+    assert first.count(0) == 4 and first.count(1) == 1
+    # While tenant 0 is backlogged it gets 4x the dispatch rate.
+    assert [r.tenant for r in out[:10]].count(0) == 8
+    # Nothing starves: the bronze backlog drains right after.
+    assert [r.tenant for r in out[10:]].count(1) == 6
+
+
+def test_fifo_policy_is_arrival_order():
+    pending = {0: deque([_Req(2, 0, arrival=0.5), _Req(3, 0, arrival=0.9)]),
+               1: deque([_Req(1, 1, arrival=0.1)])}
+    out = FifoScheduling().order(pending, {})
+    assert [r.req_id for r in out] == [1, 2, 3]
+
+
+def test_scheduler_weight_fallback_from_queued_request():
+    sched = ComputeScheduler()
+    sched.enqueue(_Req(0, 7, compute_weight=3.0))
+    assert sched.weight_of(7) == 3.0       # head-of-queue fallback
+    sched.set_weight(7, 2.0)
+    assert sched.weight_of(7) == 2.0       # pinned class wins
+    assert sched.weight_of(99) == 1.0      # unknown tenant: neutral
+
+
+# ---------------------------------------------------------------------------
+# Class-aware Eq. 4
+# ---------------------------------------------------------------------------
+def test_adapt_uniform_weights_bitwise_classic():
+    """Any uniform weight (not just 1.0) yields the classic class-blind
+    fill — weighting only expresses *relative* priority."""
+    def reqs(w):
+        return [AdaptRequest(i, 1e6, 5e8, 800, weight=w) for i in range(4)]
+
+    base = adapt_batches(reqs(1.0), budget=4e9, b_min=32)
+    for w in (0.5, 2.0, 4.0):
+        res = adapt_batches(reqs(w), budget=4e9, b_min=32)
+        assert [(a.req_id, a.batch, a.mem) for a in res.assignments] == \
+            [(a.req_id, a.batch, a.mem) for a in base.assignments]
+        assert res.dropped == base.dropped
+
+
+def test_adapt_gold_keeps_larger_batch_under_scarce_hbm():
+    gold = AdaptRequest(0, mem_per_sample=1e6, mem_model=5e8, b_max=1000,
+                        weight=4.0)
+    bronze = AdaptRequest(1, mem_per_sample=1e6, mem_model=5e8, b_max=1000,
+                          weight=1.0)
+    # Budget admits both at b_min but is far from 2 * b_max.
+    res = adapt_batches([gold, bronze], budget=2e9, b_min=32)
+    batches = {a.req_id: a.batch for a in res.assignments}
+    assert set(batches) == {0, 1}
+    assert batches[0] > batches[1], batches
+    # Weight-proportional shares of the contended range (within the
+    # 8-sample water-fill step granularity).
+    assert batches[0] / batches[1] == pytest.approx(4.0, rel=0.15)
+    assert res.mem_used <= 2e9
+
+
+def test_adapt_drop_prefers_lowest_class_not_latest():
+    gold_late = AdaptRequest(0, 1e6, 5e8, 100, weight=4.0)
+    bronze_early = AdaptRequest(1, 1e6, 5e8, 100, weight=1.0)
+    budget = 7e8     # fits exactly one request at b_min
+    # Bronze goes first regardless of submission position.
+    for order in ([bronze_early, gold_late], [gold_late, bronze_early]):
+        res = adapt_batches(order, budget=budget, b_min=32)
+        assert res.dropped == [1]
+        assert [a.req_id for a in res.assignments] == [0]
+
+
+# ---------------------------------------------------------------------------
+# Cross-server batch coalescing
+# ---------------------------------------------------------------------------
+def _coalescing_cluster(coalescing, *, hbm=16e9, n_samples=4000, seed=0):
+    return (HapiCluster(seed=seed)
+            .with_servers(2, n_accelerators=1, hbm_per_accel=hbm,
+                          flops_per_accel=65e12)
+            .with_dataset("ds", n_samples=n_samples, object_size=500,
+                          n_classes=100)
+            .with_scheduler(coalescing=coalescing))
+
+
+def test_coalescing_reduces_reload_bytes_2_replicas_1_model():
+    def run(coalescing):
+        c = _coalescing_cluster(coalescing)
+        for t in (0, 1):
+            c.submit_burst("ds", "alexnet", tenant=t, n_classes=100)
+        responses = c.drain()
+        return c, responses
+
+    c_off, r_off = run(False)
+    c_on, r_on = run(True)
+    assert len(r_on) == len(r_off)          # same work served
+    assert {(r.tenant, r.object_name) for r in r_on} == \
+        {(r.tenant, r.object_name) for r in r_off}
+    off, on = c_off.fleet.scheduler, c_on.fleet.scheduler
+    assert off.reload_saved_bytes == 0.0
+    assert on.reload_saved_bytes > 0.0
+    assert on.reload_bytes < off.reload_bytes
+    # Reload savings must not be bought with fleet serialization: a
+    # coalescer that piles every request onto the one warm replica
+    # inflates the makespan ~2x here.
+    assert c_on.fleet.makespan() <= c_off.fleet.makespan() * 1.05
+    kinds = {e[1] for e in c_off.sim.log.events}
+    assert "warm-hit" not in kinds and "coalesce" not in kinds
+
+
+def _fleet_with_queued(prof, *, n_servers=2):
+    store = synthetic_image_store("ds", n_samples=2000, object_size=500,
+                                  n_classes=100)
+    fleet = HapiFleet(store, n_servers=n_servers, n_accelerators=1,
+                      scheduler=ComputeScheduler(coalescing=True))
+    return fleet, store.object_names("ds")
+
+
+def test_coalesce_moves_to_warm_no_later_replica(prof):
+    """The win-win move: the receiver holds the model in an active lease
+    AND its accelerator is free no later than the sender's."""
+    from repro.cos.server import _Lease
+
+    fleet, objects = _fleet_with_queued(prof)
+    s0, s1 = fleet.servers
+    # s0: warm for alexnet@5, accel free at 0.5.
+    s0.leases.append(_Lease(end=10.0, nbytes=0.0, accel=0,
+                            model_key="alexnet", split=5))
+    s0.accels[0].busy_until = 0.5
+    # s1: cold, accel committed far into the future, two queued requests.
+    s1.accels[0].busy_until = 5.0
+    for i, oname in enumerate(objects[:2]):
+        req = PostRequest(i, 0, "alexnet", 5, oname, 500, prof, 0.0)
+        s1.submit(req)
+        fleet._inflight[req.req_id] = 1
+    moved = fleet.scheduler.coalesce(fleet)
+    assert moved == 1                      # depth guard: only one may move
+    assert len(s0.queue) == 1 and len(s1.queue) == 1
+    assert fleet._inflight[s0.queue[0].req_id] == 0
+    assert "coalesce" in {e[1] for e in fleet.sim.log.events}
+
+
+def test_coalesce_never_moves_to_busier_replica(prof):
+    """Serialization regression: a warm replica whose accelerator is
+    committed *later* than the sender's must not attract work — the
+    reload saving would cost real (virtual) latency."""
+    from repro.cos.server import _Lease
+
+    fleet, objects = _fleet_with_queued(prof)
+    s0, s1 = fleet.servers
+    s0.leases.append(_Lease(end=10.0, nbytes=0.0, accel=0,
+                            model_key="alexnet", split=5))
+    s0.accels[0].busy_until = 5.0          # warm but busy
+    s1.accels[0].busy_until = 0.0          # cold but idle
+    for i, oname in enumerate(objects[:4]):
+        req = PostRequest(i, 0, "alexnet", 5, oname, 500, prof, 0.0)
+        s1.submit(req)
+        fleet._inflight[req.req_id] = 1
+    assert fleet.scheduler.coalesce(fleet) == 0
+    assert len(s1.queue) == 4 and not s0.queue
+
+
+def test_dispatch_failure_requeues_undispatched(prof):
+    """Regression: the policy consumes the pending queues before the
+    dispatch loop runs; a routing failure (whole fleet down) must put
+    every undispatched request back instead of losing the burst."""
+    store = synthetic_image_store("ds", n_samples=2000, object_size=500,
+                                  n_classes=100)
+    fleet = HapiFleet(store, n_servers=2)
+    objects = store.object_names("ds")
+    for i, oname in enumerate(objects):
+        fleet.submit(PostRequest(i, 0, "alexnet", 5, oname, 500, prof, 0.0))
+    fleet.servers[0].kill()
+    fleet.servers[1].kill()
+    with pytest.raises(ConnectionError):
+        fleet.dispatch()
+    assert fleet.scheduler.pending_total() == len(objects)
+    fleet.restart(0)
+    responses = fleet.drain()
+    assert {r.object_name for r in responses} == set(objects)
+
+
+def test_coalesced_requests_never_violate_no_oom(prof):
+    """Regression: shipping a request to a warm replica re-runs Eq. 4
+    admission against the *receiver's* HBM budget, so even a tight-HBM
+    fleet never trips `_execute`'s overcommit assertion."""
+    # HBM barely above one model+b_min working set: admission is tight
+    # every round, so an unchecked coalesce would overcommit.
+    mem_model = prof.prefix_param_bytes[5]
+    one_req = mem_model + 40 * prof.act_peak_bytes[5] * (1 + prof.headroom)
+    c = _coalescing_cluster(True, hbm=one_req * 1.5, n_samples=3000)
+    for t in (0, 1, 2):
+        c.submit_burst("ds", "alexnet", tenant=t, split=5, n_classes=100)
+    responses = c.drain()                 # _execute asserts no-OOM inside
+    assert len(responses) == 3 * 6
+    for s in c.fleet.servers:
+        for a in s.accels:
+            assert a.mem_used <= a.hbm
+    # The tight budget really did exercise multi-round admission.
+    assert any(r.dropped for r in c.fleet.adapt_results)
+
+
+def test_coalescing_off_by_default():
+    fleet = HapiFleet(synthetic_image_store("ds", n_samples=500,
+                                            object_size=500, n_classes=100))
+    assert fleet.scheduler.coalescing is False
+    assert isinstance(fleet.scheduler.policy, WdrrScheduling)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated fair_queueing aliases
+# ---------------------------------------------------------------------------
+def test_fleet_fair_queueing_kwarg_deprecated_maps_to_policy():
+    store = synthetic_image_store("ds", n_samples=500, object_size=500,
+                                  n_classes=100)
+    with pytest.warns(DeprecationWarning):
+        f = HapiFleet(store, fair_queueing=False)
+    assert isinstance(f.scheduler.policy, FifoScheduling)
+    assert f.fair_queueing is False
+    with pytest.warns(DeprecationWarning):
+        f2 = HapiFleet(store, fair_queueing=True)
+    assert isinstance(f2.scheduler.policy, WdrrScheduling)
+    assert f2.fair_queueing is True
+
+
+def test_cluster_with_fair_queueing_deprecated():
+    with pytest.warns(DeprecationWarning):
+        c = HapiCluster(seed=0).with_fair_queueing(False)
+    c.with_dataset("ds", n_samples=500, object_size=500, n_classes=100)
+    assert isinstance(c.fleet.scheduler.policy, FifoScheduling)
+
+
+# ---------------------------------------------------------------------------
+# Weighted service end-to-end: accelerator-time shares track classes
+# ---------------------------------------------------------------------------
+def _accel_share(weights, seed=0):
+    c = (HapiCluster(seed=seed)
+         .with_servers(1, n_accelerators=2, flops_per_accel=65e12)
+         .with_dataset("ds", n_samples=6000, object_size=125, n_classes=100))
+    for t, w in enumerate(weights):
+        c.submit_burst("ds", "alexnet", tenant=t, n_classes=100,
+                       compute_weight=w)
+    responses = c.drain()
+    busy, _served, _end = windowed_accel_share(responses, len(weights))
+    return busy
+
+
+def test_accel_time_share_tracks_compute_weights():
+    busy = _accel_share([4.0, 1.0])
+    ratio = busy[0] / busy[1]
+    assert ratio == pytest.approx(4.0, rel=0.25), busy
+
+
+def test_accel_time_share_equal_weights_even():
+    busy = _accel_share([1.0, 1.0])
+    ratio = busy[0] / busy[1]
+    assert ratio == pytest.approx(1.0, rel=0.15), busy
+
+
+# ---------------------------------------------------------------------------
+# Richer placement signal: bytes + recency, cold-replica drop
+# ---------------------------------------------------------------------------
+def _demand_cluster(policy):
+    return (HapiCluster(seed=0)
+            .with_servers(1)
+            .with_storage(n_nodes=4, replication=1)
+            .with_dataset("ds", n_samples=2000, object_size=500,
+                          n_classes=100)
+            .with_placement(policy))
+
+
+def test_demand_decay_drops_cold_replicas():
+    policy = DemandAwarePlacement(hot_threshold=1, half_life=0.5,
+                                  cold_threshold=0.5)
+    c = _demand_cluster(policy)
+    for t in range(3):
+        c.submit_burst("ds", "alexnet", tenant=t, n_classes=100)
+    c.drain()
+    grown = [o for o in c.store.object_names("ds")
+             if len(c.store.replicas(o)) > 1]
+    assert grown, "hot objects must have been re-replicated"
+    assert policy._added
+    # Long idle stretch: demand decays cold, the placement tick drops
+    # the extra replicas again (never the last one).
+    c.fleet._vtime += 1000.0
+    c.fleet._re_replicate()
+    assert not policy._added
+    assert all(len(c.store.replicas(o)) == 1
+               for o in c.store.object_names("ds"))
+    assert "store.unreplicate" in {e[1] for e in c.sim.log.events}
+
+
+def test_demand_weighted_by_bytes_served():
+    policy = DemandAwarePlacement(byte_unit=1e6)
+
+    @dataclass
+    class _Resp:
+        object_name: str
+        act_bytes: float
+
+    policy.observe(_Resp("ds/big", act_bytes=8e6))
+    policy.observe(_Resp("ds/small", act_bytes=1e6))
+    policy.observe(_Resp("ds/small", act_bytes=1e6))
+    # 1 big POST outweighs 2 small ones: demand follows bytes, not count.
+    assert policy.demand["ds/big"] > policy.demand["ds/small"]
+
+
+def test_demand_legacy_counting_path():
+    """The documented default-off path is the original behavior: raw
+    POST counts, no decay, no cold-drop."""
+    policy = DemandAwarePlacement(weight_by_bytes=False,
+                                  half_life=float("inf"),
+                                  cold_threshold=0.0, hot_threshold=1)
+    c = _demand_cluster(policy)
+    for t in range(3):
+        c.submit_burst("ds", "alexnet", tenant=t, n_classes=100)
+    c.drain()
+    served = c.fleet.served_total()
+    assert sum(policy.demand.values()) == served      # 1 point per POST
+    assert any(len(c.store.replicas(o)) > 1
+               for o in c.store.object_names("ds"))
+    c.fleet._vtime += 1000.0
+    c.fleet._re_replicate()
+    # No decay, no cold-drop: the replicas stay.
+    assert any(len(c.store.replicas(o)) > 1
+               for o in c.store.object_names("ds"))
+    assert "store.unreplicate" not in {e[1] for e in c.sim.log.events}
+
+
+def test_store_remove_replica_keeps_last():
+    store = synthetic_image_store("ds", n_samples=1000, object_size=500,
+                                  n_classes=100)
+    oname = store.object_names("ds")[0]
+    reps = store.replicas(oname)
+    assert len(reps) == 3
+    assert store.remove_replica(oname, reps[0])
+    assert store.remove_replica(oname, reps[1])
+    assert not store.remove_replica(oname, store.replicas(oname)[0])
+    assert len(store.replicas(oname)) == 1
+
+
+# ---------------------------------------------------------------------------
+# Richer scaling signal: accelerator utilization
+# ---------------------------------------------------------------------------
+def _two_burst_slo_cluster(util_scale_up):
+    """First burst saturates the single replica's accelerators; the
+    second arrives with that utilization history on the books. SLO
+    misses are impossible (slo_delay=1e9), so only the utilization path
+    can grow the fleet."""
+    c = (HapiCluster(seed=0)
+         .with_servers(1)
+         .with_dataset("ds", n_samples=4000, object_size=500, n_classes=100)
+         .with_scaling(SloScaling(slo_delay=1e9,       # misses impossible
+                                  util_scale_up=util_scale_up,
+                                  max_servers=3, cooldown_rounds=0)))
+    for t in (0, 1):
+        c.submit_burst("ds", "alexnet", tenant=t, n_classes=100)
+    c.drain()
+    for t in (0, 1):
+        c.submit_burst("ds", "alexnet", tenant=t, n_classes=100)
+    c.drain()
+    return c
+
+
+def test_slo_scaling_grows_on_accel_utilization_before_misses():
+    c = _two_burst_slo_cluster(util_scale_up=0.05)
+    assert c.report().n_servers > 1
+    kinds = [e[1] for e in c.sim.log.events]
+    assert "accel-util" in kinds and "scale-up" in kinds
+
+
+def test_slo_scaling_util_path_disabled_matches_miss_only():
+    c = _two_burst_slo_cluster(util_scale_up=0.0)
+    assert "accel-util" not in {e[1] for e in c.sim.log.events}
+    assert c.report().n_servers == 1       # no misses, no utilization path
+
+
+def test_fleet_accel_utilization_bounds(prof):
+    store = synthetic_image_store("ds", n_samples=2000, object_size=500,
+                                  n_classes=100)
+    fleet = HapiFleet(store, n_servers=2)
+    assert fleet.accel_utilization() == 0.0
+    for i, oname in enumerate(store.object_names("ds")):
+        fleet.submit(PostRequest(i, 0, "alexnet", 5, oname, 500, prof, 0.0))
+    fleet.drain()
+    assert 0.0 < fleet.accel_utilization() <= 1.0
