@@ -2,17 +2,18 @@
 PY := PYTHONPATH=src python
 
 .PHONY: ci check tier1 fleet network sched collect fast bench-fleet \
-        bench-network bench-qos bench-all fleet-smoke qos-smoke
+        bench-network bench-qos bench-all fleet-smoke qos-smoke \
+        quantized-smoke
 
 # collect + the fast check tier first (fail fast on the most-churned
 # layers), then the full tier-1 run.
 ci: collect check tier1
 
 # The fast gate: scheduler + fabric fast tests first (the most-churned
-# subsystems), then the fast test tier + the 2-server fleet_scaling and
-# 2-tenant qos_compute smokes with determinism checks (no BENCH_*.json
-# written).
-check: sched network fast fleet-smoke qos-smoke
+# subsystems), then the fast test tier + the 2-server fleet_scaling,
+# 2-tenant qos_compute and quantized wire-path smokes with determinism
+# checks (no BENCH_*.json written).
+check: sched network fast fleet-smoke qos-smoke quantized-smoke
 
 # Fail fast on collection regressions (e.g. a hard import of an
 # uninstalled dependency aborting whole test modules).
@@ -58,7 +59,8 @@ bench-fleet:
 # throughput stays within 10% of fair share, gold/bronze trunk shares
 # track the 1:1/2:1/4:1 service-class weights within 10%, contention
 # migrates the split toward the storage tier, and the contended event
-# log reproduces. Writes BENCH_network.json (incl. the weighted series).
+# log reproduces. Writes BENCH_network.json (incl. the weighted QoS and
+# quantized int8 wire-path series).
 bench-network:
 	$(PY) benchmarks/network_contention.py --check-determinism
 
@@ -72,6 +74,12 @@ bench-qos:
 # 2-tenant tiny qos_compute sweep used by `make check` (no JSON).
 qos-smoke:
 	$(PY) benchmarks/qos_compute.py --smoke --check-determinism
+
+# Quantized wire-path smoke used by `make check`: one uncontended
+# raw-vs-int8 epoch pair; exits non-zero unless the trunk bytes drop by
+# the authoritative int8 ratio (~0.516x => >=1.8x reduction, no JSON).
+quantized-smoke:
+	$(PY) benchmarks/network_contention.py --smoke
 
 # Refresh every BENCH_*.json from one entrypoint (benchmarks/run.py
 # --bench registry).

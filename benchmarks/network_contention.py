@@ -11,6 +11,14 @@ weighted max-min sharing for weight pairs 1:1 / 2:1 / 4:1 — the share
 ratio over the contended window must match the weight ratio within 10%
 (the `weighted` series in BENCH_network.json).
 
+A **quantized wire-path series** (`quantized` in BENCH_network.json)
+runs each tenant count raw vs int8(+per-tile scales): uncontended, the
+trunk bytes drop by exactly 1/INT8_WIRE_RATIO (~1.94x, asserted
+>=1.8x); contended, the compressed tenants settle on a *shallower*
+split than the raw ones (their bytes fit through the contended trunk
+earlier). ``--smoke`` runs just the uncontended pair as a fast CI
+check.
+
 Every tenant fine-tunes the same workload through the
 :class:`repro.api.HapiCluster` facade with the flow-level network fabric
 (`.with_network`): activation pulls are flows under deterministic
@@ -40,6 +48,7 @@ from typing import Dict, List
 from repro.api import HapiCluster, NetworkSpec, TenantSpec
 from repro.config import HapiConfig
 from repro.cos.network import measure_trunk_shares
+from repro.kernels.ops import INT8_WIRE_RATIO
 
 MODEL = "alexnet"
 TRAIN_BATCH = 500
@@ -47,15 +56,20 @@ RESPLIT_EVERY = 2
 WEIGHT_PAIRS = [(1.0, 1.0), (2.0, 1.0), (4.0, 1.0)]
 
 
-def run_contended(n_tenants: int, *, trunk_bw: float, seed: int = 0) -> Dict:
+def run_contended(n_tenants: int, *, trunk_bw: float, seed: int = 0,
+                  compress: bool = False) -> Dict:
     """One co-scheduled multi-tenant epoch on a shared trunk; returns
-    metrics + the full simulator event log (for determinism checks)."""
+    metrics + the full simulator event log (for determinism checks).
+    ``compress`` turns on the quantized wire path (int8 + per-tile
+    scales): Algorithm 1, the resplit loop and the servers all charge
+    :data:`repro.kernels.ops.INT8_WIRE_RATIO`."""
     cluster = (HapiCluster(seed=seed)
                .with_servers(4, n_accelerators=2, flops_per_accel=197e12)
                .with_dataset("imagenet", n_samples=4000, object_size=500)
                .with_network(NetworkSpec(trunk_bandwidth=trunk_bw)))
+    hapi = HapiConfig(network_bandwidth=trunk_bw, compress_transfer=compress)
     handles = [cluster.tenant(TenantSpec(
-        model=MODEL, hapi=HapiConfig(network_bandwidth=trunk_bw),
+        model=MODEL, hapi=hapi,
         client_flops=197e12, resplit_every=RESPLIT_EVERY))
         for _ in range(n_tenants)]
     results = cluster.run_epochs(
@@ -74,9 +88,7 @@ def run_contended(n_tenants: int, *, trunk_bw: float, seed: int = 0) -> Dict:
         })
     # The initial split is the nominal-bandwidth Alg. 1 choice — identical
     # for every tenant of this symmetric workload.
-    split_initial = cluster.split_for(
-        MODEL, TRAIN_BATCH,
-        HapiConfig(network_bandwidth=trunk_bw)).split_index
+    split_initial = cluster.split_for(MODEL, TRAIN_BATCH, hapi).split_index
     for t in tenants:
         t["split_initial"] = split_initial
 
@@ -122,6 +134,65 @@ def weighted_sweep(*, trunk_bw: float) -> List[Dict]:
     return rows
 
 
+def quantized_sweep(*, trunk_bw: float, seed: int,
+                    tenants: List[int] = (1, 2)) -> Dict:
+    """The quantized wire path series: each tenant count runs twice —
+    raw bf16 boundary activations vs the int8(+per-tile scales) path —
+    and the rows record the trunk bytes and final splits side by side.
+
+    Two properties are asserted (and recorded for the trajectory):
+
+    * **uncontended trunk-byte reduction** — with the split pinned by an
+      uncontended epoch (n=1), quantization cuts trunk bytes by exactly
+      1/INT8_WIRE_RATIO (~1.94x for bf16; must be >= 1.8x).
+    * **shallower split under contention** — a compressed tenant's wire
+      bytes fit through a contended trunk at an earlier boundary, so its
+      re-decided split stays *shallower* (<=) than the uncompressed
+      tenant's, which must migrate deeper into the storage tier.
+    """
+    rows = []
+    for n in tenants:
+        raw = run_contended(n, trunk_bw=trunk_bw, seed=seed, compress=False)
+        qnt = run_contended(n, trunk_bw=trunk_bw, seed=seed, compress=True)
+        raw_splits = sorted(t["split_final"] for t in raw["tenants"])
+        qnt_splits = sorted(t["split_final"] for t in qnt["tenants"])
+        row = {
+            "n_tenants": n,
+            "wire_bytes_raw": raw["total_wire_bytes"],
+            "wire_bytes_quantized": qnt["total_wire_bytes"],
+            "splits_raw": raw_splits,
+            "splits_quantized": qnt_splits,
+            "split_initial_raw": raw["tenants"][0]["split_initial"],
+            "split_initial_quantized": qnt["tenants"][0]["split_initial"],
+        }
+        if raw_splits == qnt_splits:
+            # Same split on both sides: the byte ratio IS the wire ratio.
+            row["wire_ratio"] = (row["wire_bytes_quantized"]
+                                 / row["wire_bytes_raw"])
+            row["trunk_reduction"] = 1.0 / row["wire_ratio"]
+        rows.append(row)
+        print(f"quantized n={n}  raw {row['wire_bytes_raw'] / 1e6:7.0f} MB "
+              f"(splits {raw_splits})  int8 "
+              f"{row['wire_bytes_quantized'] / 1e6:7.0f} MB "
+              f"(splits {qnt_splits})"
+              + (f"  reduction={row['trunk_reduction']:.2f}x"
+                 if "trunk_reduction" in row else ""))
+
+    uncont = [r for r in rows if r["n_tenants"] == 1]
+    reduction_ok = all(r.get("trunk_reduction", 0.0) >= 1.8 for r in uncont) \
+        and bool(uncont)
+    cont = [r for r in rows if r["n_tenants"] > 1]
+    shallower_ok = all(
+        max(r["splits_quantized"]) <= max(r["splits_raw"]) for r in cont
+    ) if cont else None
+    return {
+        "ratio_expected": INT8_WIRE_RATIO,
+        "rows": rows,
+        "uncontended_reduction_ok": reduction_ok,
+        "shallower_split_under_contention_ok": shallower_ok,
+    }
+
+
 def sweep(tenants: List[int], *, trunk_bw: float, seed: int) -> List[Dict]:
     rows = []
     for n in tenants:
@@ -137,7 +208,8 @@ def sweep(tenants: List[int], *, trunk_bw: float, seed: int) -> List[Dict]:
 
 def write_json(path: str, rows: List[Dict], *, seed: int, trunk_gbps: float,
                fairness_ok: bool, more_pushdown: bool, determinism,
-               weighted: List[Dict], weighted_ok: bool) -> None:
+               weighted: List[Dict], weighted_ok: bool,
+               quantized: Dict) -> None:
     """BENCH_network.json: the contention-behavior trajectory record."""
     payload = {
         "benchmark": "network_contention",
@@ -151,6 +223,7 @@ def write_json(path: str, rows: List[Dict], *, seed: int, trunk_gbps: float,
         "determinism": determinism,
         "weighted_ok": weighted_ok,          # QoS shares track weights <=10%
         "weighted": weighted,                # gold/bronze trunk-share series
+        "quantized": quantized,              # int8 wire-path series
         "rows": [
             {k: v for k, v in r.items() if k != "event_log"}
             for r in rows
@@ -168,17 +241,35 @@ def main(argv=None) -> int:
     ap.add_argument("--trunk-gbps", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check-determinism", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quantized-series smoke only: one uncontended "
+                         "raw-vs-int8 pair, asserting the ~0.516x wire "
+                         "ratio (fast; no JSON written)")
     ap.add_argument("--out", default="BENCH_network.json",
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args(argv)
     tenants = [int(s) for s in args.tenants.split(",")]
     trunk_bw = args.trunk_gbps * 1e9 / 8
 
+    if args.smoke:
+        quantized = quantized_sweep(trunk_bw=trunk_bw, seed=args.seed,
+                                    tenants=[1])
+        ok = quantized["uncontended_reduction_ok"]
+        print(f"quantized wire ratio ~{INT8_WIRE_RATIO:.6f} "
+              f"(>=1.8x trunk reduction): {ok}")
+        return 0 if ok else 1
+
     rows = sweep(tenants, trunk_bw=trunk_bw, seed=args.seed)
     weighted = weighted_sweep(trunk_bw=trunk_bw)
     weighted_ok = all(r["ok"] for r in weighted)
     print(f"weighted trunk shares track service class within 10%: "
           f"{weighted_ok}")
+    quantized = quantized_sweep(trunk_bw=trunk_bw, seed=args.seed)
+    quantized_ok = (quantized["uncontended_reduction_ok"]
+                    and quantized["shallower_split_under_contention_ok"]
+                    is not False)
+    print(f"quantized series ok (>=1.8x uncontended reduction, shallower "
+          f"contended split): {quantized_ok}")
 
     fairness_ok = all(r["fairness_max_dev"] <= 0.10 for r in rows)
     print(f"per-tenant throughput within 10% of fair share: {fairness_ok}")
@@ -203,9 +294,9 @@ def main(argv=None) -> int:
         write_json(args.out, rows, seed=args.seed, trunk_gbps=args.trunk_gbps,
                    fairness_ok=fairness_ok, more_pushdown=more_pushdown,
                    determinism=same, weighted=weighted,
-                   weighted_ok=weighted_ok)
-    ok = (fairness_ok and weighted_ok and more_pushdown is not False
-          and same is not False)
+                   weighted_ok=weighted_ok, quantized=quantized)
+    ok = (fairness_ok and weighted_ok and quantized_ok
+          and more_pushdown is not False and same is not False)
     return 0 if ok else 1
 
 

@@ -81,4 +81,47 @@ def tier_table() -> List[Row]:
     return rows
 
 
-ALL_ROOFLINE = {"roofline": roofline_table, "tier": tier_table}
+def quantized_table() -> List[Row]:
+    """Analytic quantized wire-path series (no dry-run artifacts needed):
+    for each vision model and trunk bandwidth, Algorithm 1's split and
+    the per-iteration trunk bytes, raw bf16 vs int8(+per-tile scales).
+    Compression divides the bytes winner-selection sees by ~1.94x, so
+    the chosen split moves *shallower* (or stays: less pushdown needed
+    to fit through the trunk) and the trunk bytes at an unchanged split
+    drop by the exact ratio — the same single ratio the servers charge
+    (e.g. alexnet at 0.4 Gbps: split 13 raw vs split 3 quantized)."""
+    from repro.config import HapiConfig
+    from repro.core.cost_model import wire_bytes_per_iteration
+    from repro.core.profiler import profile_layered
+    from repro.core.splitter import choose_split
+    from repro.kernels.ops import INT8_WIRE_RATIO
+    from repro.models.vision import PAPER_MODELS
+
+    batch = 500
+    rows: List[Row] = []
+    for arch in ("alexnet", "resnet18", "vgg11"):
+        prof = profile_layered(PAPER_MODELS[arch](1000))
+        for gbps in (0.1, 0.4, 1.0):
+            bw = gbps * 1e9 / 8
+            picks = {}
+            for tag, compressed in (("bf16", False), ("int8", True)):
+                hapi = HapiConfig(network_bandwidth=bw,
+                                  compress_transfer=compressed)
+                d = choose_split(prof, hapi, batch)
+                wire = wire_bytes_per_iteration(prof, d.split_index, batch,
+                                                compressed=compressed)
+                assert abs(wire - d.wire_bytes_per_iter) < 1e-6 * max(wire, 1)
+                picks[tag] = (d.split_index, wire)
+            (s_raw, w_raw), (s_q, w_q) = picks["bf16"], picks["int8"]
+            rows.append((
+                f"quantized.{arch}.{gbps:g}gbps", 0.0,
+                f"split_bf16={s_raw};split_int8={s_q};"
+                f"wire_bf16_MB={w_raw / 1e6:.1f};wire_int8_MB={w_q / 1e6:.1f};"
+                f"ratio={INT8_WIRE_RATIO:.6f};"
+                f"shallower={'yes' if s_q <= s_raw else 'NO'}",
+            ))
+    return rows
+
+
+ALL_ROOFLINE = {"roofline": roofline_table, "tier": tier_table,
+                "quantized": quantized_table}

@@ -123,7 +123,11 @@ def roofline_epoch_time(
     the COS serves ``n_tenants`` concurrent jobs (spatial sharing).
     ``measured_bandwidth`` (e.g. an :func:`effective_bandwidth` estimate
     from live transfers) replaces the nominal ``bandwidth`` in the
-    network term — the contention-aware form of the model."""
+    network term — the contention-aware form of the model. ``compress``
+    is the wire-byte ratio of boundary compression; pass
+    :data:`repro.kernels.ops.INT8_WIRE_RATIO` (what
+    :func:`repro.core.splitter.choose_split_cost_optimal` does) so the
+    model charges the same bytes the server does."""
     prefix_flops = profile.cum_flops[split]
     suffix_fwd = profile.total_flops - prefix_flops
     # Training suffix: fwd + bwd ~ 3x fwd on trainable part.
@@ -144,8 +148,25 @@ def roofline_epoch_time(
     return EpochTime(cos, client, net, overlapped=overlap)
 
 
+def wire_bytes_per_iteration(profile: LayerProfile, split: int,
+                             train_batch: int, *,
+                             compressed: bool = False) -> float:
+    """The bytes one iteration puts on the storage<->compute trunk — the
+    paper's Fig. 13 metric, and the single wire-byte figure Algorithm 1,
+    the roofline model, the simulated server and the benchmarks all
+    agree on. ``compressed`` applies the authoritative int8(+scales)
+    ratio (:data:`repro.kernels.ops.INT8_WIRE_RATIO`)."""
+    from repro.kernels.ops import INT8_WIRE_RATIO
+
+    ratio = INT8_WIRE_RATIO if compressed else 1.0
+    return transferred_per_iteration(profile, split, train_batch,
+                                     compress=ratio)
+
+
 def transferred_per_iteration(profile: LayerProfile, split: int, train_batch: int,
                               compress: float = 1.0) -> float:
-    """Paper Fig. 13 metric: bytes crossing the bottleneck per iteration."""
+    """Raw-ratio form of :func:`wire_bytes_per_iteration` (``compress``
+    is an explicit multiplier; prefer the boolean wrapper so the ratio
+    can never drift from the kernels')."""
     wire = profile.out_bytes[split] if split > 0 else profile.input_bytes
     return wire * train_batch * compress

@@ -8,8 +8,13 @@ output fits through the network within ``window_s`` seconds
 qualifies (Alg. 1 line 13).
 
 Beyond-paper extensions (recorded separately in EXPERIMENTS.md §Perf):
-  * ``compress_ratio`` — int8 boundary compression divides the bytes the
-    winner-selection sees (the paper's l_split knob, directly).
+  * ``compress_transfer`` — int8 boundary compression divides the bytes the
+    winner-selection sees (the paper's l_split knob, directly). The
+    ratio is the single authoritative
+    :data:`repro.kernels.ops.INT8_WIRE_RATIO` (0.515625 for bf16 with
+    per-128 f32 scales) — the same figure the simulated server charges
+    and the fabric moves, so Algorithm 1's predicted wire bytes always
+    equal the bytes a compressed split actually puts on the trunk.
   * ``cost_optimal``  — pick argmin of the §4 cost model over all
     boundaries instead of the paper's threshold heuristic.
   * ``collective_aware`` — candidates are restricted to block boundaries
@@ -23,6 +28,7 @@ from typing import List, Optional
 
 from repro.config import HapiConfig
 from repro.core.profiler import LayerProfile
+from repro.kernels.ops import INT8_WIRE_RATIO
 
 
 @dataclass(frozen=True)
@@ -57,7 +63,7 @@ def choose_split(
     """Faithful Algorithm 1."""
     fz = profile.freeze_index if freeze_index is None else freeze_index
     cands = candidate_boundaries(profile, fz)
-    compress = 0.25 if hapi.compress_transfer else 1.0  # bf16 -> int8(+scales)
+    compress = INT8_WIRE_RATIO if hapi.compress_transfer else 1.0
     threshold = hapi.network_bandwidth * hapi.window_s
 
     winner, reason = fz, "default: freeze index (no candidate under C)"
@@ -102,7 +108,7 @@ def choose_split_cost_optimal(
     from repro.core.cost_model import roofline_epoch_time
 
     fz = profile.freeze_index if freeze_index is None else freeze_index
-    compress = 0.25 if hapi.compress_transfer else 1.0
+    compress = INT8_WIRE_RATIO if hapi.compress_transfer else 1.0
     d = dataset_size or train_batch * 32
 
     best_i, best_t = 0, float("inf")

@@ -118,9 +118,11 @@ def make_tune_loss_fn(model: Model, plan: TierPlan) -> Callable:
             from repro.models.module import dtype_of
 
             q, scales = acts
-            acts = ops.dequantize_int8(q, scales).astype(
-                dtype_of(model.cfg.compute_dtype)
-            )
+            # Both backends (Pallas and ref) dequantize straight into the
+            # model's compute dtype — no post-hoc .astype papering over a
+            # hardcoded bf16 output.
+            acts = ops.dequantize_int8(
+                q, scales, dtype=dtype_of(model.cfg.compute_dtype))
         return model.loss_suffix(trainable, acts, batch, plan.split)
 
     return tune_loss

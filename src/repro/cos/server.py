@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.config import HW
+from repro.kernels.ops import INT8_WIRE_RATIO
 from repro.core.batch_adapt import AdaptRequest, AdaptResult, adapt_batches
 from repro.core.profiler import LayerProfile
 from repro.cos.clock import Accelerator, EventLog, Simulator
@@ -243,13 +244,21 @@ class HapiServer:
 
         acts = None
         act_bytes = prof.out_bytes[req.split] * n
+        quantized = False
         if req.model_key in self.executors:
             acts = self.executors[req.model_key](obj.payload, req.split, cos_batch)
-            act_bytes = float(
-                sum(np.asarray(a).nbytes for a in _leaves(acts))
-            )
-        if req.compress:
-            act_bytes *= 0.53  # int8 + per-128 scales vs bf16
+            leaves = [np.asarray(a) for a in _leaves(acts)]
+            act_bytes = float(sum(a.nbytes for a in leaves))
+            # A live extract fn that already quantized (int8 + scales
+            # leaves) produced the actual wire payload: its measured
+            # nbytes IS the wire size. Applying the ratio again would
+            # double-discount the transfer.
+            quantized = any(a.dtype == np.int8 for a in leaves)
+        if req.compress and not quantized:
+            # The single authoritative int8(+per-tile scales) ratio —
+            # identical to what Algorithm 1 predicted for this request
+            # (see repro.kernels.ops.compression_ratio).
+            act_bytes *= INT8_WIRE_RATIO
         self.log.add(end, "served", f"{req.object_name} b={cos_batch}")
         if self.sim is not None:
             self.sim.record(end, "served",

@@ -32,7 +32,7 @@ def tier_transfer(acts, target_sharding=None, compress: bool = False):
 
 def decompress_boundary(acts, dtype=jnp.bfloat16):
     if isinstance(acts, tuple) and len(acts) == 2:
-        return ops.dequantize_int8(*acts).astype(dtype)
+        return ops.dequantize_int8(*acts, dtype=dtype)
     return acts
 
 

@@ -3,9 +3,11 @@
 The tier boundary's wire bytes are THE knob of the paper's cost model
 (l_split). These kernels quantize the boundary activations to int8 with
 per-128-lane scales right where they leave the storage tier, and
-dequantize on the compute tier: 0.53x the bf16 bytes on the bottleneck
-link. Tiles are (rows x 128) — one scale per VREG lane group, so the
-abs-max reduction and the scaled cast both vectorize cleanly.
+dequantize on the compute tier: exactly
+``ops.compression_ratio(dtype, tile)`` of the raw bytes on the
+bottleneck link — (1 + 4/128)/2 = 0.515625x for bf16 with the default
+128 tile. Tiles are (rows x 128) — one scale per VREG lane group, so
+the abs-max reduction and the scaled cast both vectorize cleanly.
 """
 from __future__ import annotations
 
@@ -66,8 +68,9 @@ def quantize_int8_pallas(x: jnp.ndarray, *, tile: int = 128,
     return q, s
 
 
-@functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("dtype", "row_block", "interpret"))
 def dequantize_int8_pallas(q: jnp.ndarray, scales: jnp.ndarray, *,
+                           dtype=jnp.bfloat16,
                            row_block: int = 256, interpret: bool = True):
     *lead, d = q.shape
     tile = d // scales.shape[-1]
@@ -88,7 +91,7 @@ def dequantize_int8_pallas(q: jnp.ndarray, scales: jnp.ndarray, *,
             pl.BlockSpec((rb, d // tile), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows_pad, d), jnp.bfloat16),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, d), dtype),
         interpret=interpret,
     )(qf, sf)
     return x[:rows].reshape(*lead, d)

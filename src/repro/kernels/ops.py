@@ -18,6 +18,40 @@ from repro.kernels import ref
 
 _STATE = {"pallas": False, "interpret": True}
 
+# ---------------------------------------------------------------------------
+# The authoritative int8 wire-compression ratio.
+#
+# Every layer that reasons about compressed boundary bytes — Algorithm 1
+# (core.splitter), the §4 cost model (core.cost_model), the simulated
+# server's wire charge (cos.server) and the benchmarks — derives it from
+# here, so the splitter's prediction and the server's accounting can
+# never disagree about what a compressed split puts on the trunk.
+# ---------------------------------------------------------------------------
+WIRE_TILE = 128                 # quantization tile: one scale per 128 lanes
+SCALE_DTYPE = jnp.float32       # per-tile scales ride the wire in f32
+
+
+def compression_ratio(dtype=jnp.bfloat16, tile: int = WIRE_TILE) -> float:
+    """Exact wire-byte ratio of int8(+per-tile scales) vs raw activations.
+
+    ``(itemsize_q + scale_bytes / tile) / itemsize_act`` — for bf16
+    activations with the default 128-lane tile that is
+    ``(1 + 4/128) / 2 = 0.515625`` (NOT 0.25: the scales cost 4 bytes per
+    tile, and bf16 is already half of f32). ``tile`` should be the
+    effective tile after the kernels' ``gcd(d, tile)`` clamp when the
+    feature width is narrower than 128."""
+    if tile <= 0:
+        raise ValueError(f"tile must be > 0, got {tile}")
+    itemsize = jnp.dtype(dtype).itemsize
+    q_bytes = jnp.dtype(jnp.int8).itemsize
+    scale_bytes = jnp.dtype(SCALE_DTYPE).itemsize
+    return (q_bytes + scale_bytes / tile) / itemsize
+
+
+# The simulator's wire convention: boundary activations ship bf16 when
+# uncompressed, int8 + per-128 f32 scales when compressed (== 0.515625).
+INT8_WIRE_RATIO = compression_ratio(jnp.bfloat16, WIRE_TILE)
+
 
 def use_pallas(enable: bool = True, interpret: bool = True) -> None:
     _STATE["pallas"] = enable
@@ -73,10 +107,11 @@ def quantize_int8(x, tile: int = 128):
     return ref.quantize_int8(x, tile=tile)
 
 
-@jax.jit
-def dequantize_int8(q, scales):
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def dequantize_int8(q, scales, dtype=jnp.bfloat16):
     if _STATE["pallas"]:
         from repro.kernels import int8_transfer as ik
 
-        return ik.dequantize_int8_pallas(q, scales, interpret=_STATE["interpret"])
-    return ref.dequantize_int8(q, scales)
+        return ik.dequantize_int8_pallas(q, scales, dtype=dtype,
+                                         interpret=_STATE["interpret"])
+    return ref.dequantize_int8(q, scales, dtype=dtype)

@@ -39,6 +39,14 @@ model loaded, cutting stateless reload bytes):
 
     PYTHONPATH=src python -m repro.launch.serve --cos-fleet 2 \\
         --tenants 2 --scheduler wdrr --tenant-compute-weight 4,1 --coalesce
+
+``--compress`` turns on the quantized wire path: split-boundary
+activations ship int8 with per-tile scales, and Algorithm 1, the cost
+model and the servers all charge the one authoritative ratio
+(:data:`repro.kernels.ops.INT8_WIRE_RATIO`, ~0.516x for bf16):
+
+    PYTHONPATH=src python -m repro.launch.serve --cos-fleet 4 \\
+        --tenants 4 --network-trunk 1.0 --compress
 """
 from __future__ import annotations
 
@@ -113,6 +121,7 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
                     scaling: str = "queue-depth",
                     scheduler: str = "wdrr",
                     coalesce: bool = False,
+                    compress: bool = False,
                     compute_weights=None):
     """Drive a HAPI deployment through the :class:`repro.api.HapiCluster`
     facade with a multi-tenant burst workload and report served
@@ -122,6 +131,7 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
     tenants), ``coalesce`` turns on cross-server batch coalescing."""
     from repro.api import (HapiCluster, PLACEMENT_POLICIES, ROUTING_POLICIES,
                            SCALING_POLICIES, SCHEDULER_POLICIES)
+    from repro.config import HapiConfig
     from repro.models.vision import PAPER_MODELS
 
     cluster = (HapiCluster(seed=seed)
@@ -137,9 +147,10 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
             min_servers=1, max_servers=max_servers))
     names = list(PAPER_MODELS)
     weights = compute_weights or [1.0]
+    hapi = HapiConfig(compress_transfer=compress)
     for t in range(n_tenants):
         cluster.submit_burst("serve", names[t % len(names)], tenant=t,
-                             train_batch=1000,
+                             train_batch=1000, hapi=hapi,
                              compute_weight=weights[t % len(weights)])
     responses = cluster.drain()
     report = cluster.report()
@@ -163,6 +174,7 @@ def serve_cos_contended(n_servers: int, *, n_tenants: int = 4, seed: int = 0,
                         placement: str = "round-robin",
                         scaling: str = "queue-depth",
                         scheduler: str = "wdrr", coalesce: bool = False,
+                        compress: bool = False,
                         weights=None, compute_weights=None):
     """Co-scheduled tenant epochs on a shared WAN egress trunk: every
     tenant's activation pulls are flows contending under weighted
@@ -193,7 +205,8 @@ def serve_cos_contended(n_servers: int, *, n_tenants: int = 4, seed: int = 0,
             min_servers=1, max_servers=max_servers))
     weights = weights or [1.0]
     handles = [cluster.tenant(TenantSpec(
-        model="alexnet", hapi=HapiConfig(network_bandwidth=bw),
+        model="alexnet",
+        hapi=HapiConfig(network_bandwidth=bw, compress_transfer=compress),
         client_flops=197e12, resplit_every=resplit_every,
         network_weight=weights[i % len(weights)],
         compute_weight=(compute_weights[i % len(compute_weights)]
@@ -244,6 +257,11 @@ def main(argv=None):
                     help="cross-server batch coalescing: ship queued "
                          "requests to replicas already holding their "
                          "model loaded (cuts stateless reload bytes)")
+    ap.add_argument("--compress", action="store_true",
+                    help="int8(+per-tile scales) boundary compression on "
+                         "the activation wire: Algorithm 1, the cost "
+                         "model and the servers all charge the single "
+                         "authoritative ratio (~0.516x for bf16)")
     from repro.api import (PLACEMENT_POLICIES, ROUTING_POLICIES,
                            SCALING_POLICIES, SCHEDULER_POLICIES)
 
@@ -271,6 +289,7 @@ def main(argv=None):
                                   scaling=args.scaling,
                                   scheduler=args.scheduler,
                                   coalesce=args.coalesce,
+                                  compress=args.compress,
                                   weights=weights,
                                   compute_weights=cweights)
         print(f"shared trunk {args.network_trunk:.2f} Gbps, "
@@ -288,7 +307,7 @@ def main(argv=None):
                               seed=args.seed, max_servers=args.max_servers,
                               routing=args.routing, placement=args.placement,
                               scaling=args.scaling, scheduler=args.scheduler,
-                              coalesce=args.coalesce,
+                              coalesce=args.coalesce, compress=args.compress,
                               compute_weights=cweights)
         print(f"served {out['served']} POSTs in {out['makespan']:.3f}s "
               f"({out['n_alive']} replicas alive)")

@@ -4,6 +4,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # pragma: no cover - env dependent
+    import _propcheck as st
+    from _propcheck import given, settings
+
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -122,6 +129,63 @@ def test_int8_roundtrip(shape):
     np.testing.assert_allclose(np.asarray(s), np.asarray(se), rtol=1e-6)
     xr = dequantize_int8_pallas(q, s, interpret=True)
     rel = float(jnp.max(jnp.abs(xr.astype(jnp.float32) - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.02
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "shape,row_block",
+    [
+        ((5, 96), 256),     # d=96: gcd clamps the 128 tile to 32
+        ((3, 200), 256),    # d=200: gcd clamps the tile to 8
+        ((7, 96), 4),       # 7 rows @ row_block 4 -> padded to 8 rows
+        ((11, 3, 200), 8),  # folded lead dims: 33 rows -> padded to 40
+        ((1, 200), 256),    # single row, clamped tile
+    ],
+)
+def test_int8_awkward_shapes_pallas_matches_ref(shape, row_block, dtype):
+    """Pallas <-> oracle parity where the kernel's shape handling works
+    hardest: gcd-clamped tiles (d not a multiple of 128) and row counts
+    that force the row-padding path. q/scales must match exactly, the
+    dequantized output must match the oracle at the requested dtype, and
+    the round trip stays inside the standard tolerance."""
+    x = (jax.random.normal(KEY, shape, jnp.float32) * 3).astype(dtype)
+    q, s = quantize_int8_pallas(x, row_block=row_block, interpret=True)
+    qe, se = ref.quantize_int8(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qe))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(se), rtol=1e-6)
+
+    xr = dequantize_int8_pallas(q, s, dtype=dtype, row_block=row_block,
+                                interpret=True)
+    xe = ref.dequantize_int8(qe, se, dtype=dtype)
+    assert xr.dtype == jnp.dtype(dtype)
+    assert xe.dtype == jnp.dtype(dtype)
+    np.testing.assert_allclose(np.asarray(xr, np.float32),
+                               np.asarray(xe, np.float32),
+                               atol=1e-6, rtol=1e-6)
+    rel = float(jnp.max(jnp.abs(xr.astype(jnp.float32)
+                                - x.astype(jnp.float32)))
+                / jnp.max(jnp.abs(x.astype(jnp.float32))))
+    assert rel < 0.02
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 9), d=st.integers(1, 260),
+       seed=st.integers(0, 2**31 - 1))
+def test_int8_roundtrip_property(rows, d, seed):
+    """Random (rows, d): Pallas quantize/dequantize agree with the
+    oracle bit-for-bit on q/scales and round-trip within rel 2%.
+    row_block=4 keeps the padding path exercised whenever rows > 4."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, d),
+                          jnp.float32) * 3
+    q, s = quantize_int8_pallas(x, row_block=4, interpret=True)
+    qe, se = ref.quantize_int8(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qe))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(se), rtol=1e-6)
+    xr = dequantize_int8_pallas(q, s, dtype=jnp.float32, row_block=4,
+                                interpret=True)
+    rel = float(jnp.max(jnp.abs(xr - x)) / jnp.maximum(jnp.max(jnp.abs(x)),
+                                                       1e-8))
     assert rel < 0.02
 
 

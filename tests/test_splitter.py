@@ -18,6 +18,7 @@ from repro.core.splitter import (
     choose_split,
     choose_split_cost_optimal,
 )
+from repro.kernels.ops import INT8_WIRE_RATIO
 
 
 def synth_profile(out_bytes, input_bytes, freeze):
@@ -92,7 +93,14 @@ def test_compression_allows_earlier_split():
         prof, HapiConfig(network_bandwidth=1e9 / 8, compress_transfer=True), 200
     )
     assert comp.split_index <= plain.split_index
-    assert comp.wire_bytes_per_iter <= plain.wire_bytes_per_iter
+    # At the boundary compression selected, the predicted wire bytes are
+    # exactly the authoritative int8(+scales) ratio of the raw bytes —
+    # what the server charges. (The compressed wire bytes of an *earlier*
+    # split may legitimately exceed the uncompressed bytes of a later
+    # one: compression buys pushdown, not unconditionally fewer bytes.)
+    assert comp.wire_bytes_per_iter == pytest.approx(
+        comp.bytes_per_sample * 200 * INT8_WIRE_RATIO)
+    assert comp.wire_bytes_per_iter < comp.bytes_per_sample * 200
 
 
 def test_token_lm_defaults_to_freeze():
