@@ -2,8 +2,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: ci check tier1 fleet network sched collect fast bench-fleet \
-        bench-network bench-qos bench-all fleet-smoke qos-smoke \
-        quantized-smoke
+        bench-network bench-qos bench-replay bench-all fleet-smoke \
+        qos-smoke quantized-smoke replay-smoke
 
 # collect + the fast check tier first (fail fast on the most-churned
 # layers), then the full tier-1 run.
@@ -11,9 +11,9 @@ ci: collect check tier1
 
 # The fast gate: scheduler + fabric fast tests first (the most-churned
 # subsystems), then the fast test tier + the 2-server fleet_scaling,
-# 2-tenant qos_compute and quantized wire-path smokes with determinism
-# checks (no BENCH_*.json written).
-check: sched network fast fleet-smoke qos-smoke quantized-smoke
+# 2-tenant qos_compute, quantized wire-path and 30k-request trace-replay
+# smokes with determinism checks (no BENCH_*.json written).
+check: sched network fast fleet-smoke qos-smoke quantized-smoke replay-smoke
 
 # Fail fast on collection regressions (e.g. a hard import of an
 # uninstalled dependency aborting whole test modules).
@@ -71,9 +71,21 @@ bench-network:
 bench-qos:
 	$(PY) benchmarks/qos_compute.py --check-determinism
 
+# Million-request trace replay + log-driven placement search; exits
+# non-zero unless the learned placement beats demand-aware on p99 queue
+# delay and the generator+replayer reproduce bit-for-bit. Writes
+# BENCH_replay.json (replay rate + policy quality trajectory).
+bench-replay:
+	$(PY) benchmarks/replay_policy_search.py --check-determinism
+
 # 2-tenant tiny qos_compute sweep used by `make check` (no JSON).
 qos-smoke:
 	$(PY) benchmarks/qos_compute.py --smoke --check-determinism
+
+# 30k-request replay_policy_search sweep used by `make check` (same
+# contention level as the full run, no JSON).
+replay-smoke:
+	$(PY) benchmarks/replay_policy_search.py --smoke --check-determinism --out ""
 
 # Quantized wire-path smoke used by `make check`: one uncontended
 # raw-vs-int8 epoch pair; exits non-zero unless the trunk bytes drop by

@@ -26,12 +26,18 @@ def _bench_qos(check):
     return main(["--check-determinism"] if check else [])
 
 
+def _bench_replay(check):
+    from benchmarks.replay_policy_search import main
+    return main(["--check-determinism"] if check else [])
+
+
 # BENCH_*.json writers: each returns a process-style exit code (0 = all
 # assertions held) and writes its own JSON next to the repo root.
 ALL_BENCH = {
     "fleet": _bench_fleet,       # BENCH_fleet.json
     "network": _bench_network,   # BENCH_network.json
     "qos": _bench_qos,           # BENCH_qos.json
+    "replay": _bench_replay,     # BENCH_replay.json
 }
 
 
@@ -54,7 +60,8 @@ def run_benches(names, check: bool = True) -> int:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench names")
-    ap.add_argument("--bench", default=None, metavar="all|fleet,network,qos",
+    ap.add_argument("--bench", default=None,
+                    metavar="all|fleet,network,qos,replay",
                     help="refresh the BENCH_*.json suites instead of the "
                          "paper-figure CSV benches")
     ap.add_argument("--no-determinism", action="store_true",

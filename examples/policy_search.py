@@ -1,0 +1,83 @@
+"""Log-driven policy search end to end: record, generate, replay, learn.
+
+    PYTHONPATH=src python examples/policy_search.py
+
+Walks the whole trace-replay loop on small inputs:
+
+1. **Record** a live fleet run into the versioned JSONL trace format
+   and replay it — the replayed routing decisions match the live run's
+   one-for-one (the round-trip property).
+2. **Generate** a synthetic heavy-tailed day (diurnal arrivals, Zipf
+   object popularity, bursts) in the same format.
+3. **Search** placement policies by replaying the day through each —
+   only the decision path runs, so this is ~100k requests/second.
+4. **Learn**: train the linear placement head on a separate trace and
+   replay again — the learned policy's p99 queue delay beats the
+   hand-tuned demand-aware heuristic.
+
+Scale up with benchmarks/replay_policy_search.py (a million-request
+day, BENCH_replay.json).
+"""
+import os
+import tempfile
+
+from repro.api import HapiCluster, PLACEMENT_POLICIES
+from repro.replay import (Trace, TraceReplayer, WorkloadSpec, generate,
+                          live_route_decisions, record_trace)
+from repro.replay.learned import train_placement_model
+
+
+def record_and_replay():
+    print("== 1. record a live run, replay it, compare decisions ==")
+    cluster = (HapiCluster(seed=11)
+               .with_servers(2)
+               .with_storage(n_nodes=4, replication=2)
+               .with_dataset("ds", n_samples=2000, object_size=500,
+                             n_classes=100))
+    cluster.submit_burst("ds", "alexnet", tenant=0, n_classes=100)
+    cluster.submit_burst("ds", "resnet18", tenant=1, n_classes=100)
+    responses = cluster.drain()
+    trace = record_trace(cluster, responses)
+    path = os.path.join(tempfile.mkdtemp(), "live.jsonl")
+    trace.write(path)
+    reloaded = Trace.read(path)
+    v = TraceReplayer(reloaded, collect_decisions=True).run()
+    live = live_route_decisions(reloaded)
+    match = v.route_decisions() == live
+    print(f"recorded {len(trace.requests)} requests + "
+          f"{len(trace.events)} events -> {path}")
+    print(f"replayed decisions == live decisions: {match}\n")
+    assert match
+
+
+def search_and_learn():
+    print("== 2. generate a heavy-tailed day, search placements ==")
+    spec = WorkloadSpec(n_requests=200_000, duration=5760.0, seed=7)
+    day = generate(spec)
+    print(f"generated {len(day):,} requests over {spec.duration:.0f}s "
+          f"({len(day.header.placement)} objects, Zipf "
+          f"{spec.zipf_exponent})")
+    print("\n== 3+4. replay under each placement policy ==")
+    model = train_placement_model(generate(spec.scaled(60_000, seed=8)))
+    candidates = [
+        ("round-robin", PLACEMENT_POLICIES["round-robin"]()),
+        ("demand-aware", PLACEMENT_POLICIES["demand-aware"]()),
+        ("learned (trained)", model.to_policy()),
+    ]
+    print(f"{'placement':>18} | {'p50':>7} | {'p99':>7} | {'mean':>7} | "
+          f"{'replicas':>9} | {'req/s':>8}")
+    for name, pol in candidates:
+        v = TraceReplayer(day, placement=pol).run()
+        print(f"{name:>18} | {v.queue_delay_p50:6.3f}s | "
+              f"{v.queue_delay_p99:6.3f}s | {v.queue_delay_mean:6.3f}s | "
+              f"+{v.replicas_added:4d}/-{v.replicas_dropped:3d} | "
+              f"{v.events_per_sec:8,.0f}")
+
+
+def main():
+    record_and_replay()
+    search_and_learn()
+
+
+if __name__ == "__main__":
+    main()

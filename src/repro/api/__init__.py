@@ -23,6 +23,7 @@ from repro.api.policies import (
     FabricAwareRouting,
     FabricAwareScaling,
     FifoScheduling,
+    LearnedPlacement,
     LeastLoadedRouting,
     PLACEMENT_POLICIES,
     PlacementPolicy,
@@ -46,6 +47,7 @@ __all__ = list(_CLUSTER_EXPORTS) + [
     "RoutingPolicy", "ReplicaAwareRouting", "LeastLoadedRouting",
     "FabricAwareRouting",
     "PlacementPolicy", "RoundRobinPlacement", "DemandAwarePlacement",
+    "LearnedPlacement",
     "ScalingPolicy", "QueueDepthScaling", "SloScaling", "FabricAwareScaling",
     "SchedulerPolicy", "WdrrScheduling", "FifoScheduling", "ComputeScheduler",
     "ROUTING_POLICIES", "PLACEMENT_POLICIES", "SCALING_POLICIES",

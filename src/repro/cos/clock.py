@@ -20,18 +20,41 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 class EventLog:
+    """Append-only trace of ``(t, kind, detail)`` tuples.
+
+    A per-kind index is maintained on :meth:`add` so :meth:`filter` (and
+    cross-kind selections like ``HapiFleet.scale_events``) stay O(matches)
+    instead of O(N)-scanning the ever-growing trace list — million-event
+    replay traces made the linear scans a real cost. :meth:`digest` is
+    byte-identical to the pre-index behavior."""
+
     def __init__(self) -> None:
         self.events: List[Tuple[float, str, str]] = []
+        # kind -> [(position_in_events, event), ...]; positions let
+        # multi-kind selections merge back into log order cheaply.
+        self._by_kind: Dict[str, List[Tuple[int, Tuple[float, str, str]]]] = {}
 
     def add(self, t: float, kind: str, detail: str = "") -> None:
-        self.events.append((t, kind, detail))
+        e = (t, kind, detail)
+        self._by_kind.setdefault(kind, []).append((len(self.events), e))
+        self.events.append(e)
 
     def filter(self, kind: str) -> List[Tuple[float, str, str]]:
-        return [e for e in self.events if e[1] == kind]
+        return [e for _, e in self._by_kind.get(kind, ())]
+
+    def filter_many(self, kinds) -> List[Tuple[float, str, str]]:
+        """Events of any of ``kinds``, in log order (index-merged)."""
+        hits = [pe for k in kinds for pe in self._by_kind.get(k, ())]
+        hits.sort(key=lambda pe: pe[0])
+        return [e for _, e in hits]
+
+    def kinds(self) -> List[str]:
+        """Every event kind recorded so far (insertion order)."""
+        return list(self._by_kind)
 
     def digest(self) -> Tuple[Tuple[float, str, str], ...]:
         """Hashable snapshot for determinism checks (same seed => equal)."""

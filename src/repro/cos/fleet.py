@@ -500,6 +500,5 @@ class HapiFleet:
         return sum(self.served_by_server.values())
 
     def scale_events(self) -> List[Tuple[float, str, str]]:
-        return [e for e in self.sim.log.events
-                if e[1] in ("scale-up", "scale-down", "cordon",
-                            "kill", "restart")]
+        return self.sim.log.filter_many(
+            ("scale-up", "scale-down", "cordon", "kill", "restart"))

@@ -122,13 +122,16 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
                     scheduler: str = "wdrr",
                     coalesce: bool = False,
                     compress: bool = False,
-                    compute_weights=None):
+                    compute_weights=None,
+                    record: str = None):
     """Drive a HAPI deployment through the :class:`repro.api.HapiCluster`
     facade with a multi-tenant burst workload and report served
     throughput per replica and per tenant. ``routing``/``placement``/
     ``scaling``/``scheduler`` select fleet policies by registry name;
     ``compute_weights`` assigns accelerator service classes (cycled over
-    tenants), ``coalesce`` turns on cross-server batch coalescing."""
+    tenants), ``coalesce`` turns on cross-server batch coalescing;
+    ``record`` writes the run as a replayable JSONL trace
+    (:mod:`repro.replay`) for offline policy search."""
     from repro.api import (HapiCluster, PLACEMENT_POLICIES, ROUTING_POLICIES,
                            SCALING_POLICIES, SCHEDULER_POLICIES)
     from repro.config import HapiConfig
@@ -153,9 +156,14 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
                              train_batch=1000, hapi=hapi,
                              compute_weight=weights[t % len(weights)])
     responses = cluster.drain()
+    if record:
+        from repro.replay import record_trace
+
+        record_trace(cluster, responses).write(record)
     report = cluster.report()
     return {
         "served": len(responses),
+        "trace": record,
         "makespan": report.makespan,
         "n_alive": report.n_alive,
         "served_by_server": report.served_by_server,
@@ -164,6 +172,31 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
         "reload_bytes": cluster.fleet.scheduler.reload_bytes,
         "reload_saved_bytes": cluster.fleet.scheduler.reload_saved_bytes,
     }
+
+
+def replay_cos_trace(path: str, *, routing: str = "replica-aware",
+                     placement: str = "round-robin",
+                     scaling: str = "queue-depth",
+                     scheduler: str = "wdrr",
+                     tick_interval: float = 30.0):
+    """Re-drive a recorded/generated trace (``--record`` output or
+    :func:`repro.replay.workload.generate`) through the named policy
+    combination without standing the fleet back up — only the decision
+    path executes, so million-request traces replay in seconds."""
+    from repro.api import (PLACEMENT_POLICIES, ROUTING_POLICIES,
+                           SCALING_POLICIES, SCHEDULER_POLICIES)
+    from repro.replay import Trace, TraceReplayer
+
+    trace = Trace.read(path)
+    verdict = TraceReplayer(
+        trace,
+        routing=ROUTING_POLICIES[routing](),
+        placement=PLACEMENT_POLICIES[placement](),
+        scaling=SCALING_POLICIES[scaling]() if scaling != "none" else None,
+        scheduler=SCHEDULER_POLICIES[scheduler](),
+        tick_interval=tick_interval,
+    ).run()
+    return trace, verdict
 
 
 def serve_cos_contended(n_servers: int, *, n_tenants: int = 4, seed: int = 0,
@@ -270,10 +303,33 @@ def main(argv=None):
     ap.add_argument("--placement", default="round-robin",
                     choices=sorted(PLACEMENT_POLICIES))
     ap.add_argument("--scaling", default="queue-depth",
-                    choices=sorted(SCALING_POLICIES))
+                    choices=sorted(SCALING_POLICIES) + ["none"])
     ap.add_argument("--scheduler", default="wdrr",
                     choices=sorted(SCHEDULER_POLICIES))
+    ap.add_argument("--record", default=None, metavar="PATH",
+                    help="with --cos-fleet: write the run as a replayable "
+                         "JSONL trace (repro.replay format)")
+    ap.add_argument("--replay", default=None, metavar="PATH",
+                    help="re-drive a recorded/generated trace through the "
+                         "selected --routing/--placement/--scaling/"
+                         "--scheduler combination (decision path only; "
+                         "no fleet, no JAX)")
     args = ap.parse_args(argv)
+    if args.replay:
+        trace, v = replay_cos_trace(args.replay, routing=args.routing,
+                                    placement=args.placement,
+                                    scaling=args.scaling,
+                                    scheduler=args.scheduler)
+        print(f"replayed {v.n_requests:,} requests ({v.mode}) in "
+              f"{v.wall_seconds:.2f}s ({v.events_per_sec:,.0f} req/s) "
+              f"under {v.policies}")
+        print(f"queue delay p50={v.queue_delay_p50:.4f}s "
+              f"p95={v.queue_delay_p95:.4f}s p99={v.queue_delay_p99:.4f}s "
+              f"mean={v.queue_delay_mean:.4f}s")
+        print(f"makespan={v.makespan:.1f}s replicas +{v.replicas_added}/"
+              f"-{v.replicas_dropped} scale +{v.scale_ups}/-{v.scale_downs} "
+              f"decisions sha256={v.decision_hash[:16]}")
+        return
     cweights = ([float(w) for w in args.tenant_compute_weight.split(",")]
                 if args.tenant_compute_weight else None)
     if args.cos_fleet and args.network_trunk > 0:
@@ -284,6 +340,7 @@ def main(argv=None):
                                   trunk_gbps=args.network_trunk,
                                   resplit_every=args.resplit_every,
                                   max_servers=args.max_servers,
+                                  autoscale=args.scaling != "none",
                                   routing=args.routing,
                                   placement=args.placement,
                                   scaling=args.scaling,
@@ -305,12 +362,15 @@ def main(argv=None):
     if args.cos_fleet:
         out = serve_cos_fleet(args.cos_fleet, n_tenants=args.tenants,
                               seed=args.seed, max_servers=args.max_servers,
+                              autoscale=args.scaling != "none",
                               routing=args.routing, placement=args.placement,
                               scaling=args.scaling, scheduler=args.scheduler,
                               coalesce=args.coalesce, compress=args.compress,
-                              compute_weights=cweights)
+                              compute_weights=cweights, record=args.record)
         print(f"served {out['served']} POSTs in {out['makespan']:.3f}s "
               f"({out['n_alive']} replicas alive)")
+        if args.record:
+            print(f"trace recorded to {args.record}")
         if args.coalesce:
             print(f"stateless reloads: {out['reload_bytes'] / 1e9:.2f} GB "
                   f"charged, {out['reload_saved_bytes'] / 1e9:.2f} GB "

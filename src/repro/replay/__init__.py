@@ -1,0 +1,38 @@
+"""Trace record/replay subsystem: versioned traces, workload
+generation, fast policy replay, and learned-placement training.
+
+* :mod:`repro.replay.schema` — the versioned JSONL trace format.
+* :mod:`repro.replay.trace` — Trace container, writer/reader, live-run
+  recorder.
+* :mod:`repro.replay.workload` — seeded open-loop workload generator
+  (diurnal + Zipf + bursts).
+* :mod:`repro.replay.replayer` — decision-path replay of a trace under
+  any :mod:`repro.api.policies` combination.
+* :mod:`repro.replay.learned` — offline JAX training for
+  :class:`~repro.api.policies.LearnedPlacement` (imported lazily so the
+  replay hot path never pulls in JAX).
+"""
+from repro.replay.schema import (EVENT_KINDS, EventRecord, RequestRecord,
+                                 TRACE_VERSION, TraceHeader, validate_kind)
+from repro.replay.trace import Trace, live_route_decisions, record_trace
+from repro.replay.replayer import ReplayVerdict, TraceReplayer, replay
+from repro.replay.workload import WorkloadSpec, catalog_objects, generate
+
+_LAZY = {"PlacementModel", "featurize", "train_placement_model"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.replay import learned
+        return getattr(learned, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "TRACE_VERSION", "EVENT_KINDS", "validate_kind",
+    "TraceHeader", "RequestRecord", "EventRecord",
+    "Trace", "record_trace", "live_route_decisions",
+    "TraceReplayer", "ReplayVerdict", "replay",
+    "WorkloadSpec", "generate", "catalog_objects",
+    "PlacementModel", "featurize", "train_placement_model",
+]
