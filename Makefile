@@ -2,8 +2,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: ci check tier1 fleet network sched collect fast bench-fleet \
-        bench-network bench-qos bench-replay bench-all fleet-smoke \
-        qos-smoke quantized-smoke replay-smoke
+        bench-network bench-qos bench-replay bench-sim bench-all \
+        fleet-smoke qos-smoke quantized-smoke replay-smoke obs-smoke
 
 # collect + the fast check tier first (fail fast on the most-churned
 # layers), then the full tier-1 run.
@@ -11,9 +11,11 @@ ci: collect check tier1
 
 # The fast gate: scheduler + fabric fast tests first (the most-churned
 # subsystems), then the fast test tier + the 2-server fleet_scaling,
-# 2-tenant qos_compute, quantized wire-path and 30k-request trace-replay
-# smokes with determinism checks (no BENCH_*.json written).
-check: sched network fast fleet-smoke qos-smoke quantized-smoke replay-smoke
+# 2-tenant qos_compute, quantized wire-path, 30k-request trace-replay
+# and observability smokes with determinism checks (no BENCH_*.json
+# written).
+check: sched network fast fleet-smoke qos-smoke quantized-smoke \
+       replay-smoke obs-smoke
 
 # Fail fast on collection regressions (e.g. a hard import of an
 # uninstalled dependency aborting whole test modules).
@@ -71,6 +73,12 @@ bench-network:
 bench-qos:
 	$(PY) benchmarks/qos_compute.py --check-determinism
 
+# Simulator-core profile: fleet events/sec, peak RSS, and the tracing
+# overhead proof (replay req/s with spans on vs off must stay within
+# 5%). Writes BENCH_sim.json (the simulator-throughput trajectory).
+bench-sim:
+	$(PY) benchmarks/sim_profile.py
+
 # Million-request trace replay + log-driven placement search; exits
 # non-zero unless the learned placement beats demand-aware on p99 queue
 # delay and the generator+replayer reproduce bit-for-bit. Writes
@@ -86,6 +94,12 @@ qos-smoke:
 # contention level as the full run, no JSON).
 replay-smoke:
 	$(PY) benchmarks/replay_policy_search.py --smoke --check-determinism --out ""
+
+# Observability smoke used by `make check`: a tiny traced burst must
+# export a valid Perfetto JSON spanning >= 3 tiers and fingerprint
+# identically across seed-identical runs (no timing gates: CI flakes).
+obs-smoke:
+	$(PY) benchmarks/sim_profile.py --smoke
 
 # Quantized wire-path smoke used by `make check`: one uncontended
 # raw-vs-int8 epoch pair; exits non-zero unless the trunk bytes drop by

@@ -81,14 +81,18 @@ def run_coalesce(*, seed: int = 0, n_samples: int = 4000,
         for t in (0, 1):
             c.submit_burst("qos", MODEL, tenant=t, n_classes=100)
         responses = c.drain()
-        sched = c.fleet.scheduler
+        # Reload accounting comes from the structured metrics registry
+        # (repro.obs) — counted at the same scheduler sites as the
+        # legacy ComputeScheduler attributes, so the values are
+        # identical (asserted by tests/test_obs.py).
+        mx = c.metrics()
         return {
             "served": len(responses),
             "makespan": c.fleet.makespan(),
             "work": sorted((r.tenant, r.object_name) for r in responses),
-            "reload_bytes": sched.reload_bytes,
-            "reload_saved_bytes": sched.reload_saved_bytes,
-            "coalesced_moves": sched.coalesced,
+            "reload_bytes": mx.total("reload_bytes_total"),
+            "reload_saved_bytes": mx.total("reload_saved_bytes_total"),
+            "coalesced_moves": int(mx.total("coalesce_total")),
             "event_log": c.event_digest(),
         }
 

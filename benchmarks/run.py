@@ -31,6 +31,13 @@ def _bench_replay(check):
     return main(["--check-determinism"] if check else [])
 
 
+def _bench_sim(check):
+    # sim_profile has no determinism flag (it is a pure timing/memory
+    # profile; the obs determinism lives in its --smoke gate and tests)
+    from benchmarks.sim_profile import main
+    return main([])
+
+
 # BENCH_*.json writers: each returns a process-style exit code (0 = all
 # assertions held) and writes its own JSON next to the repo root.
 ALL_BENCH = {
@@ -38,6 +45,7 @@ ALL_BENCH = {
     "network": _bench_network,   # BENCH_network.json
     "qos": _bench_qos,           # BENCH_qos.json
     "replay": _bench_replay,     # BENCH_replay.json
+    "sim": _bench_sim,           # BENCH_sim.json
 }
 
 
@@ -61,7 +69,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     ap.add_argument("--bench", default=None,
-                    metavar="all|fleet,network,qos,replay",
+                    metavar="all|fleet,network,qos,replay,sim",
                     help="refresh the BENCH_*.json suites instead of the "
                          "paper-figure CSV benches")
     ap.add_argument("--no-determinism", action="store_true",

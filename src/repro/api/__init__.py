@@ -40,6 +40,8 @@ from repro.api.policies import (
     WdrrScheduling,
 )
 from repro.cos.network import NetworkFabric, NetworkSpec
+from repro.obs import (MetricsRegistry, Tracer, chrome_trace,
+                       validate_chrome_trace, write_trace)
 
 _CLUSTER_EXPORTS = ("HapiCluster", "TenantSpec", "TenantHandle", "ClusterReport")
 
@@ -53,6 +55,8 @@ __all__ = list(_CLUSTER_EXPORTS) + [
     "ROUTING_POLICIES", "PLACEMENT_POLICIES", "SCALING_POLICIES",
     "SCHEDULER_POLICIES",
     "NetworkSpec", "NetworkFabric",
+    "Tracer", "MetricsRegistry", "chrome_trace", "validate_chrome_trace",
+    "write_trace",
 ]
 
 

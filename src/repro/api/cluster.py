@@ -194,6 +194,7 @@ class HapiCluster:
         self._fleet: Optional[HapiFleet] = None
         self._network: Optional[NetworkSpec] = None
         self._fabric: Optional[NetworkFabric] = None
+        self._tracing = True
 
     # -- builder ---------------------------------------------------------------
     def _check_mutable(self, what: str) -> None:
@@ -308,6 +309,16 @@ class HapiCluster:
             self._datasets.append(spec)
         return self
 
+    def with_tracing(self, enabled: bool) -> "HapiCluster":
+        """Toggle structured-span collection (:class:`repro.obs.Tracer`).
+        On by default — tracing is purely additive, the golden event-log
+        digests are byte-identical either way; turn it off only for
+        maximum-throughput sweeps. Metrics stay on regardless (reports
+        and benchmarks read them)."""
+        self._check_mutable("with_tracing")
+        self._tracing = enabled
+        return self
+
     def with_executor(self, model_key: str, fn: Callable) -> "HapiCluster":
         """Register a live JAX forward ``fn(payload, split, cos_batch)``
         fleet-wide (current and future replicas)."""
@@ -322,6 +333,7 @@ class HapiCluster:
         if self._fleet is not None:
             return self
         sim = Simulator(self.seed)
+        sim.tracer.enabled = self._tracing
         store = ObjectStore(placement=self._placement, **self._storage_kwargs)
         self._fleet = HapiFleet(
             store, n_servers=self._n_servers, sim=sim,
@@ -525,6 +537,18 @@ class HapiCluster:
                                for t, s in sorted(fleet.tenant_stats.items())},
             scale_events=fleet.scale_events(),
         )
+
+    @property
+    def tracer(self):
+        """The cluster-wide :class:`repro.obs.Tracer` (structured spans;
+        export with :func:`repro.obs.write_trace`)."""
+        return self.sim.tracer
+
+    def metrics(self):
+        """The cluster-wide :class:`repro.obs.MetricsRegistry` — query
+        with ``total()``/``percentile()`` or snapshot with
+        ``snapshot()``/``dump()``."""
+        return self.sim.metrics
 
     def event_digest(self) -> Tuple[Tuple[float, str, str], ...]:
         """Hashable event-log snapshot for determinism checks."""

@@ -510,7 +510,12 @@ class SloScaling:
             return None
         util = (busy - self._u_busy) / (len(accels) * dt)
         self._u_busy, self._u_vtime = busy, fleet._vtime
-        return min(max(util, 0.0), 1.0)
+        util = min(max(util, 0.0), 1.0)
+        # Replay policies run against a sim shim without metrics.
+        mx = getattr(fleet.sim, "metrics", None)
+        if mx is not None:
+            mx.gauge_set("accel_utilization", util)
+        return util
 
     def decide(self, fleet: "HapiFleet") -> int:
         if self._cooldown > 0:

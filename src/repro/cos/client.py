@@ -297,10 +297,19 @@ class HapiClient:
         # on a shared fabric trunk) feeds the EWMA the resplit loop uses.
         t_data = t
         wire = 0.0
+        tr = self.sim.tracer if self.sim is not None else None
         for d in done:
             t_req = max(t_data, d.finished)
             _, t_data = self.link.transfer(t_req, d.act_bytes)
             wire += d.act_bytes
+            if tr is not None:
+                tr.emit("wire.transfer", t_req, t_data, tier="network",
+                        track=self.link.name, parent=d.span_id,
+                        labels=(("tenant", str(self.tenant)),
+                                ("bytes", f"{d.act_bytes:.0f}")))
+                tr.extend(d.span_id, t_data)
+                mx = self.sim.metrics
+                mx.observe("stage_seconds", t_data - t_req, stage="wire")
             port_bw = getattr(self.link, "observed_bw", None)
             if port_bw is not None:
                 self.observed_bw = port_bw      # fabric-maintained EWMA
@@ -312,13 +321,25 @@ class HapiClient:
         # Training phase at the training batch size (suffix fwd+bwd).
         prof = self.profile
         suffix_flops = 3.0 * (prof.total_flops - prof.cum_flops[split]) * train_batch
-        _, t_end = self.accel.compute(t_data, suffix_flops,
-                                      efficiency=self.mxu_efficiency)
+        t_suffix, t_end = self.accel.compute(t_data, suffix_flops,
+                                             efficiency=self.mxu_efficiency)
         if self.train_fn is not None and all(d.acts is not None for d in done):
             self.train_fn([d.acts for d in done])
         self.log.add(t_end, "iteration", f"{it}")
         if self.sim is not None:
             self.sim.record(t_end, "iteration", f"t{self.tenant} it={it}")
+            tr = self.sim.tracer
+            it_sid = tr.emit("iteration", t, t_end, tier="client",
+                             track=f"tenant{self.tenant}",
+                             labels=(("tenant", str(self.tenant)),
+                                     ("it", str(it)),
+                                     ("split", str(split))))
+            tr.emit("client.compute", t_suffix, t_end, tier="client",
+                    track=self.accel.name, parent=it_sid,
+                    labels=(("tenant", str(self.tenant)),
+                            ("it", str(it))))
+            mx = self.sim.metrics
+            mx.observe("stage_seconds", t_end - t_suffix, stage="client")
         by_server: Dict[int, int] = {}
         for d in done:
             by_server[d.server_id] = by_server.get(d.server_id, 0) + 1

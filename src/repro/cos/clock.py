@@ -22,6 +22,9 @@ import heapq
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.span import Tracer
+
 
 class EventLog:
     """Append-only trace of ``(t, kind, detail)`` tuples.
@@ -82,6 +85,11 @@ class Simulator:
         self.rng = np.random.default_rng(seed)
         self.now = 0.0
         self.log = EventLog()
+        # Observability sidecars: structured spans + metrics live NEXT TO
+        # the event log, never inside it — log digests stay byte-identical
+        # with tracing on (tests/test_obs.py asserts this).
+        self.tracer = Tracer()
+        self.metrics = MetricsRegistry()
         self._queue: List[Tuple[float, int, str, str, Optional[Callable]]] = []
         self._seq = 0
 
@@ -104,6 +112,8 @@ class Simulator:
         while self._queue and self._queue[0][0] <= t:
             et, _, kind, detail, cb = heapq.heappop(self._queue)
             self.now = max(self.now, et)
+            mx = self.metrics
+            mx.inc("events_total", kind=kind)
             self.log.add(et, kind, detail)
             if cb is not None:
                 cb()
@@ -120,6 +130,8 @@ class Simulator:
 
     # -- shared trace --------------------------------------------------------
     def record(self, t: float, kind: str, detail: str = "") -> None:
+        mx = self.metrics
+        mx.inc("events_total", kind=kind)
         self.log.add(t, kind, detail)
 
 

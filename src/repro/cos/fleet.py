@@ -276,28 +276,35 @@ class HapiFleet:
         self.servers[server_id].kill()
         self.cordoned.discard(server_id)
         self.sim.record(self._vtime, "kill", f"s{server_id}")
+        mx = self.sim.metrics
+        mx.inc("scale_events_total", kind="kill")
         self._reissue_lost()
 
     def restart(self, server_id: int) -> None:
         self.servers[server_id].restart()
         self.sim.record(self._vtime, "restart", f"s{server_id}")
+        mx = self.sim.metrics
+        mx.inc("scale_events_total", kind="restart")
 
     def add_server(self) -> HapiServer:
         """Scale up: un-cordon a draining replica if any (the cheapest
         capacity — it is still alive), else revive a dead replica, else
         spawn a fresh one (stateless servers make both identical). New
         replicas inherit the fleet-wide executor registry."""
+        mx = self.sim.metrics
         for sid in sorted(self.cordoned):
             s = self.servers[sid]
             if s.alive:
                 self.cordoned.discard(sid)
                 self.sim.record(self._vtime, "scale-up", f"s{sid} uncordon")
+                mx.inc("scale_events_total", kind="scale-up")
                 return s
             self.cordoned.discard(sid)       # stale entry: replica died
         for s in self.servers:
             if not s.alive:
                 s.restart()
                 self.sim.record(self._vtime, "scale-up", f"s{s.server_id}")
+                mx.inc("scale_events_total", kind="scale-up")
                 return s
         s = HapiServer(self.store, server_id=len(self.servers), sim=self.sim,
                        scheduler=self.scheduler, **self._server_kwargs)
@@ -305,6 +312,7 @@ class HapiFleet:
             s.register_executor(key, fn)
         self.servers.append(s)
         self.sim.record(self._vtime, "scale-up", f"s{s.server_id}")
+        mx.inc("scale_events_total", kind="scale-up")
         return s
 
     def remove_server(self) -> Optional[HapiServer]:
@@ -321,6 +329,8 @@ class HapiFleet:
         victim = min(cands, key=lambda s: (s.queue_depth(), -s.server_id))
         self.cordoned.add(victim.server_id)
         self.sim.record(self._vtime, "cordon", f"s{victim.server_id}")
+        mx = self.sim.metrics
+        mx.inc("scale_events_total", kind="cordon")
         self._retire_drained()
         return victim
 
@@ -338,6 +348,8 @@ class HapiFleet:
             s.kill()
             self.cordoned.discard(sid)
             self.sim.record(self._vtime, "scale-down", f"s{sid}")
+            mx = self.sim.metrics
+            mx.inc("scale_events_total", kind="scale-down")
             retired += 1
         return retired
 
@@ -350,6 +362,19 @@ class HapiFleet:
         ts = self.tenant_stats.setdefault(req.tenant, TenantStats())
         ts.first_arrival = min(ts.first_arrival, req.arrival)
         self.sim.record(req.arrival, "post", f"t{req.tenant} {req.object_name}")
+        # Root of the request's causal tree: every tier the request
+        # touches (storage read, admission, pushdown compute, wire pull)
+        # parents its span here; _account/client pulls extend the end.
+        tr = self.sim.tracer
+        req.span_id = tr.begin(
+            "request", req.arrival, tier="control",
+            track=f"tenant{req.tenant}",
+            labels=(("tenant", str(req.tenant)),
+                    ("model", req.model_key),
+                    ("split", str(req.split)),
+                    ("object", req.object_name)))
+        mx = self.sim.metrics
+        mx.inc("requests_total", tenant=req.tenant)
 
     def dispatch(self) -> int:
         """Move pending requests onto replicas in scheduler-policy order
@@ -491,6 +516,17 @@ class HapiFleet:
         self.placement.observe(resp)
         if self.scaling is not None:
             self.scaling.observe(resp)
+        tr = self.sim.tracer
+        tr.extend(resp.span_id, resp.finished)
+        mx = self.sim.metrics
+        mx.inc("responses_total", tenant=resp.tenant, server=resp.server_id)
+        mx.observe("queue_delay_seconds", resp.queue_delay,
+                   tenant=resp.tenant)
+        # SLO burn: count responses whose queue delay exceeded the
+        # scaling policy's target (the signal SloScaling reacts to).
+        slo = getattr(self.scaling, "slo_delay", None)
+        if slo is not None and resp.queue_delay > slo:
+            mx.inc("slo_miss_total", tenant=resp.tenant)
 
     # -- metrics -----------------------------------------------------------------
     def makespan(self) -> float:

@@ -148,6 +148,18 @@ class FabricPort(Link):
             prior = sample if self.observed_bw is None else self.observed_bw
             self.observed_bw = effective_bandwidth(prior, [sample],
                                                    alpha=self.ewma_alpha)
+        if self.sim is not None and self.trunk is not None and nbytes > 0:
+            mx = self.sim.metrics
+            mx.inc("trunk_bytes_total", nbytes, link=self.trunk.name)
+            # Saturation gauge: sum of the trunk ports' measured EWMA
+            # bandwidths against the trunk's capacity, clamped to 1.
+            shared = sum(
+                p.observed_bw or 0.0
+                for p in (self.fabric.ports.values() if self.fabric else ())
+                if p.trunk is self.trunk)
+            mx.gauge_set("trunk_utilization",
+                         min(shared / self.trunk.capacity, 1.0),
+                         link=self.trunk.name)
 
 
 class _Flow:

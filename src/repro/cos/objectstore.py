@@ -137,21 +137,31 @@ class ObjectStore:
         return True
 
     # -- storage request (proxy <- storage node) ------------------------------
-    def read(self, oname: str, t: float) -> Tuple[StoredObject, float]:
-        """Returns (object, time_ready). Reads from the least-busy replica."""
+    def read(self, oname: str, t: float, *,
+             parent: int = -1) -> Tuple[StoredObject, float]:
+        """Returns (object, time_ready). Reads from the least-busy replica.
+        ``parent`` links the emitted storage.read span into the owning
+        request's causal tree."""
         obj = self.objects[oname]
         replicas = self._placement[oname]
         node = min(
             (self.nodes[r] for r in replicas), key=lambda nd: (nd.busy_until, nd.name)
         )
-        _, ready = node.transfer(t, obj.nbytes)
+        s, ready = node.transfer(t, obj.nbytes)
         if self.sim is not None:
             self.sim.record(ready, "store.read", f"{oname}@{node.name}")
+            tr = self.sim.tracer
+            tr.emit("storage.read", s, ready, tier="storage",
+                    track=node.name, parent=parent,
+                    labels=(("object", oname),))
+            mx = self.sim.metrics
+            mx.observe("stage_seconds", ready - s, stage="storage")
         return obj, ready
 
     def read_batch(
         self, onames: List[str], t: float,
         weights: Optional[List[float]] = None,
+        parents: Optional[List[int]] = None,
     ) -> Optional[List[Tuple[StoredObject, float]]]:
         """Resolve one drain round's reads *together* as a
         :meth:`~repro.cos.network.NetworkFabric.transfer_concurrent`
@@ -190,11 +200,20 @@ class ObjectStore:
         reqs = [(self.nodes[r], t, self.objects[o].nbytes, w)
                 for o, r, w in zip(onames, picks, weights)]
         resolved = self.fabric.transfer_concurrent(reqs)
+        if parents is None:
+            parents = [-1] * len(onames)
         out: List[Tuple[StoredObject, float]] = []
-        for oname, r, (_s, ready) in zip(onames, picks, resolved):
+        for oname, r, (_s, ready), par in zip(onames, picks, resolved,
+                                              parents):
             if self.sim is not None:
                 self.sim.record(ready, "store.read",
                                 f"{oname}@{self.nodes[r].name}")
+                tr = self.sim.tracer
+                tr.emit("storage.read", _s, ready, tier="storage",
+                        track=self.nodes[r].name, parent=par,
+                        labels=(("object", oname),))
+                mx = self.sim.metrics
+                mx.observe("stage_seconds", ready - _s, stage="storage")
             out.append((self.objects[oname], ready))
         return out
 

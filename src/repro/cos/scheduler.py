@@ -320,6 +320,8 @@ class ComputeScheduler:
                     fleet._vtime, "coalesce",
                     f"t{req.tenant} {req.object_name} "
                     f"s{src.server_id} -> s{dst.server_id}")
+                mx = fleet.sim.metrics
+                mx.inc("coalesce_total", tenant=req.tenant)
         return moved
 
     # -- per-server admission round -------------------------------------------
@@ -389,6 +391,14 @@ class ComputeScheduler:
         # hit the shared storage nodes in their arrival interleaving, so one
         # accelerator's batch cannot monopolize the read path.
         ordered = sorted(planned, key=lambda p: p[0])
+        if server.sim is not None and arrived:
+            # One admission span per scheduling round: the wait window plus
+            # the Eq. 4 plan, labelled with admitted/deferred counts.
+            tr = server.sim.tracer
+            tr.emit("admission", t - server.wait_window, t, tier="compute",
+                    track=f"s{server.server_id}",
+                    labels=(("admitted", str(len(ordered))),
+                            ("deferred", str(len(arrived) - len(ordered)))))
         # Batch window: the round's storage reads resolve as one
         # transfer_concurrent batch (weighted by tenant class) whenever
         # they would actually share a storage link; read_batch returns
@@ -396,7 +406,8 @@ class ComputeScheduler:
         # before.
         reads = server.store.read_batch(
             [p[1].object_name for p in ordered], t,
-            [p[1].network_weight for p in ordered]) if len(ordered) > 1 \
+            [p[1].network_weight for p in ordered],
+            parents=[p[1].span_id for p in ordered]) if len(ordered) > 1 \
             else None
         for i, (_, req, batch, mem, ai) in enumerate(ordered):
             # Coalescing's warm-lease hit: the model prefix is already
@@ -405,14 +416,22 @@ class ComputeScheduler:
             # request's Eq. 4 share still includes the model bytes).
             nbytes = req.profile.prefix_param_bytes[req.split]
             warm = self.coalescing and self._warm(server, req, ai)
+            mx = server.sim.metrics if server.sim is not None else None
             if warm:
                 self.reload_saved_bytes += nbytes
                 if server.sim is not None:
                     server.sim.record(t, "warm-hit",
                                       f"s{server.server_id} t{req.tenant} "
                                       f"{req.object_name}")
+                if mx is not None:
+                    mx.inc("warm_hit_total", tenant=req.tenant)
+                    mx.inc("reload_saved_bytes_total", nbytes,
+                           server=server.server_id)
             else:
                 self.reload_bytes += nbytes
+                if mx is not None:
+                    mx.inc("reload_bytes_total", nbytes,
+                           server=server.server_id)
             resp = server._execute(req, batch, mem, ai, t,
                                    pre_read=reads[i] if reads else None,
                                    charge_load=not warm)

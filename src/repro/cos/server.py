@@ -49,6 +49,8 @@ class PostRequest:
     network_weight: float = 1.0  # tenant service class (weighted fabric share)
     compute_weight: float = 1.0  # tenant service class on the accelerators
                                  # (WDRR dispatch + class-aware Eq. 4)
+    span_id: int = -1            # root span of the request's causal tree
+                                 # (set by fleet intake; -1 = untraced)
 
 
 @dataclass
@@ -63,6 +65,7 @@ class PostResponse:
     started: float
     finished: float
     server_id: int = 0             # replica that served the request
+    span_id: int = -1              # causal-tree root carried from the request
 
     @property
     def queue_delay(self) -> float:
@@ -208,7 +211,7 @@ class HapiServer:
                  charge_load: bool = True) -> PostResponse:
         accel = self.accels[accel_idx]
         obj, t_data = pre_read if pre_read is not None \
-            else self.store.read(req.object_name, t)
+            else self.store.read(req.object_name, t, parent=req.span_id)
 
         n = obj.n_samples
         prof = req.profile
@@ -228,6 +231,7 @@ class HapiServer:
         # Small COS batches under-fill the MXU (replaces paper assumption 4).
         eff *= min(1.0, cos_batch / 128.0)
         start, end = accel.compute(max(t_data, t), flops + 1e3, efficiency=eff)
+        t_compute_end = end
         end += load_time
         # Eq. 4's whole point is that admission provably fits the HBM
         # budget; a failed allocation here means the adaptation invariant
@@ -264,11 +268,27 @@ class HapiServer:
             self.sim.record(end, "served",
                             f"s{self.server_id} t{req.tenant} "
                             f"{req.object_name} b={cos_batch}")
+            tr = self.sim.tracer
+            tr.emit("cos.compute", start, t_compute_end, tier="compute",
+                    track=accel.name, parent=req.span_id,
+                    labels=(("tenant", str(req.tenant)),
+                            ("model", req.model_key),
+                            ("split", str(req.split)),
+                            ("batch", str(cos_batch))))
+            if load_time > 0.0:
+                tr.emit("model.load", t_compute_end, end, tier="compute",
+                        track=accel.name, parent=req.span_id,
+                        labels=(("model", req.model_key),))
+            if req.compress and not quantized:
+                tr.emit("quantize", end, end, tier="compute",
+                        track=accel.name, parent=req.span_id)
+            mx = self.sim.metrics
+            mx.observe("stage_seconds", end - start, stage="compute")
         return PostResponse(
             req_id=req.req_id, tenant=req.tenant, object_name=req.object_name,
             acts=acts, act_bytes=act_bytes, cos_batch=cos_batch,
             arrival=req.arrival, started=start, finished=end,
-            server_id=self.server_id,
+            server_id=self.server_id, span_id=req.span_id,
         )
 
     # -- metrics -----------------------------------------------------------------

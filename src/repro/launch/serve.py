@@ -123,7 +123,8 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
                     coalesce: bool = False,
                     compress: bool = False,
                     compute_weights=None,
-                    record: str = None):
+                    record: str = None,
+                    trace_out: str = None):
     """Drive a HAPI deployment through the :class:`repro.api.HapiCluster`
     facade with a multi-tenant burst workload and report served
     throughput per replica and per tenant. ``routing``/``placement``/
@@ -160,17 +161,29 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
         from repro.replay import record_trace
 
         record_trace(cluster, responses).write(record)
+    if trace_out:
+        from repro.obs import write_trace
+
+        write_trace(cluster.tracer, trace_out)
     report = cluster.report()
+    # Operational counters come from the structured metrics registry
+    # (identical to the scheduler's attribute accounting — asserted by
+    # tests/test_obs.py); the event-log string path stays for the
+    # golden-digest tests only.
+    mx = cluster.metrics()
     return {
         "served": len(responses),
         "trace": record,
+        "trace_out": trace_out,
         "makespan": report.makespan,
         "n_alive": report.n_alive,
         "served_by_server": report.served_by_server,
         "tenant_throughput": report.tenant_throughput,
         "scale_events": report.scale_events,
-        "reload_bytes": cluster.fleet.scheduler.reload_bytes,
-        "reload_saved_bytes": cluster.fleet.scheduler.reload_saved_bytes,
+        "reload_bytes": mx.total("reload_bytes_total"),
+        "reload_saved_bytes": mx.total("reload_saved_bytes_total"),
+        "queue_delay_p99": mx.percentile("queue_delay_seconds", 0.99),
+        "slo_misses": int(mx.total("slo_miss_total")),
     }
 
 
@@ -178,16 +191,23 @@ def replay_cos_trace(path: str, *, routing: str = "replica-aware",
                      placement: str = "round-robin",
                      scaling: str = "queue-depth",
                      scheduler: str = "wdrr",
-                     tick_interval: float = 30.0):
+                     tick_interval: float = 30.0,
+                     trace_out: str = None):
     """Re-drive a recorded/generated trace (``--record`` output or
     :func:`repro.replay.workload.generate`) through the named policy
     combination without standing the fleet back up — only the decision
-    path executes, so million-request traces replay in seconds."""
+    path executes, so million-request traces replay in seconds.
+    ``trace_out`` additionally renders the replayed requests to a
+    Perfetto/Chrome-trace JSON timeline (one span per request — the
+    replayer's 1-in-8 sampling is disabled when a timeline was
+    explicitly asked for)."""
     from repro.api import (PLACEMENT_POLICIES, ROUTING_POLICIES,
                            SCALING_POLICIES, SCHEDULER_POLICIES)
+    from repro.obs import Tracer, write_trace
     from repro.replay import Trace, TraceReplayer
 
     trace = Trace.read(path)
+    tracer = Tracer() if trace_out else None
     verdict = TraceReplayer(
         trace,
         routing=ROUTING_POLICIES[routing](),
@@ -195,7 +215,11 @@ def replay_cos_trace(path: str, *, routing: str = "replica-aware",
         scaling=SCALING_POLICIES[scaling]() if scaling != "none" else None,
         scheduler=SCHEDULER_POLICIES[scheduler](),
         tick_interval=tick_interval,
+        tracer=tracer,
+        trace_sample=1,
     ).run()
+    if trace_out:
+        write_trace(tracer, trace_out)
     return trace, verdict
 
 
@@ -314,12 +338,18 @@ def main(argv=None):
                          "selected --routing/--placement/--scaling/"
                          "--scheduler combination (decision path only; "
                          "no fleet, no JAX)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's structured-span timeline as "
+                         "Perfetto/Chrome-trace JSON (open at "
+                         "ui.perfetto.dev); works with --cos-fleet and "
+                         "--replay")
     args = ap.parse_args(argv)
     if args.replay:
         trace, v = replay_cos_trace(args.replay, routing=args.routing,
                                     placement=args.placement,
                                     scaling=args.scaling,
-                                    scheduler=args.scheduler)
+                                    scheduler=args.scheduler,
+                                    trace_out=args.trace_out)
         print(f"replayed {v.n_requests:,} requests ({v.mode}) in "
               f"{v.wall_seconds:.2f}s ({v.events_per_sec:,.0f} req/s) "
               f"under {v.policies}")
@@ -329,6 +359,8 @@ def main(argv=None):
         print(f"makespan={v.makespan:.1f}s replicas +{v.replicas_added}/"
               f"-{v.replicas_dropped} scale +{v.scale_ups}/-{v.scale_downs} "
               f"decisions sha256={v.decision_hash[:16]}")
+        if args.trace_out:
+            print(f"timeline written to {args.trace_out}")
         return
     cweights = ([float(w) for w in args.tenant_compute_weight.split(",")]
                 if args.tenant_compute_weight else None)
@@ -366,11 +398,14 @@ def main(argv=None):
                               routing=args.routing, placement=args.placement,
                               scaling=args.scaling, scheduler=args.scheduler,
                               coalesce=args.coalesce, compress=args.compress,
-                              compute_weights=cweights, record=args.record)
+                              compute_weights=cweights, record=args.record,
+                              trace_out=args.trace_out)
         print(f"served {out['served']} POSTs in {out['makespan']:.3f}s "
               f"({out['n_alive']} replicas alive)")
         if args.record:
             print(f"trace recorded to {args.record}")
+        if args.trace_out:
+            print(f"timeline written to {args.trace_out}")
         if args.coalesce:
             print(f"stateless reloads: {out['reload_bytes'] / 1e9:.2f} GB "
                   f"charged, {out['reload_saved_bytes'] / 1e9:.2f} GB "

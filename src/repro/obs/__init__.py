@@ -1,0 +1,27 @@
+"""Cross-tier observability: structured spans, metrics, timeline export.
+
+Three pieces, all deterministic under the simulator's virtual clock and
+all strictly additive next to the golden-hashed :class:`EventLog`:
+
+* :mod:`repro.obs.span` — ``Span``/``Tracer`` causal request trees
+  (storage read -> admission -> pushdown compute -> wire -> client).
+* :mod:`repro.obs.metrics` — ``MetricsRegistry`` counters / gauges /
+  histograms with label sets and a deterministic text dump.
+* :mod:`repro.obs.export` — Chrome-trace / Perfetto JSON rendering
+  (one process per tier, one thread per resource track).
+
+Vocabulary is pinned by :mod:`repro.obs.schema`; shared percentile math
+lives in :mod:`repro.obs.hist`.
+"""
+from repro.obs.export import chrome_trace, validate_chrome_trace, write_trace
+from repro.obs.hist import DEFAULT_TIME_BUCKETS, bucket_counts, percentile
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.schema import METRIC_KEYS, SPAN_NAMES, TIERS
+from repro.obs.span import Span, Tracer
+
+__all__ = [
+    "Span", "Tracer", "Histogram", "MetricsRegistry",
+    "chrome_trace", "validate_chrome_trace", "write_trace",
+    "percentile", "bucket_counts", "DEFAULT_TIME_BUCKETS",
+    "SPAN_NAMES", "METRIC_KEYS", "TIERS",
+]

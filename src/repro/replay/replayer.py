@@ -37,6 +37,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, NamedTuple, Optional, Tuple
 
+from repro.obs.hist import percentile as _percentile
 from repro.replay.schema import RequestRecord
 from repro.replay.trace import Trace
 
@@ -228,10 +229,10 @@ class ReplayVerdict:
         return d
 
 
-def _percentile(sorted_vals: List[float], q: float) -> float:
-    if not sorted_vals:
-        return 0.0
-    return sorted_vals[min(len(sorted_vals) - 1, int(q * len(sorted_vals)))]
+# Percentiles are the shared exact nearest-rank implementation
+# (repro.obs.hist.percentile), so a ReplayVerdict and a metrics-registry
+# histogram can never disagree on the same delays — the historical local
+# int(q*n) indexing was floor-biased by one rank.
 
 
 # ---------------------------------------------------------------------------
@@ -255,7 +256,8 @@ class TraceReplayer:
 
     def __init__(self, trace: Trace, *, routing=None, placement=None,
                  scaling=None, scheduler=None, tick_interval: float = 30.0,
-                 collect_decisions: bool = False) -> None:
+                 collect_decisions: bool = False, tracer=None,
+                 trace_sample: int = 8) -> None:
         from repro.api.policies import (ReplicaAwareRouting,
                                         RoundRobinPlacement, WdrrScheduling)
         self.trace = trace
@@ -265,6 +267,19 @@ class TraceReplayer:
         self.scheduler = scheduler or WdrrScheduling()
         self.tick_interval = tick_interval
         self.collect = collect_decisions
+        # Opt-in (None = off): replay is a hot loop of ~10us/request, so
+        # tracing must cost nothing when unused. With a repro.obs.Tracer
+        # passed, every ``trace_sample``-th executed request emits one
+        # lightweight span (deterministic counter, so sampled traces are
+        # still seed-reproducible); ``trace_sample=1`` records every
+        # request. Track names and label tuples are interned so the
+        # per-sample cost is one raw-tuple append — BENCH_sim.json holds
+        # the default-sampling overhead under 5%.
+        self.tracer = tracer
+        self.trace_sample = max(1, trace_sample)
+        self._span_skip = 0
+        self._span_tracks: Dict[int, str] = {}
+        self._span_labels: Dict[int, tuple] = {}
 
     # -- decision/tick helpers ----------------------------------------------
     def _tick(self, fleet: _ReplayFleet, sha, decisions,
@@ -318,6 +333,21 @@ class TraceReplayer:
         end = start + req.service
         accel.busy_until = end
         accel.busy_time += req.service
+        tr = self.tracer
+        if tr is not None:
+            self._span_skip += 1
+            if self._span_skip >= self.trace_sample:
+                self._span_skip = 0
+                track = self._span_tracks.get(server.server_id)
+                if track is None:
+                    track = self._span_tracks[server.server_id] = \
+                        f"s{server.server_id}"
+                labels = self._span_labels.get(req.tenant)
+                if labels is None:
+                    labels = self._span_labels[req.tenant] = \
+                        (("tenant", str(req.tenant)),)
+                tr.emit_fast("replay.request", start, end, "compute", track,
+                             -1, labels)
         return _Served(req.object_name, req.act_bytes, req.tenant,
                        req.compute_weight, req.arrival, start, end)
 
