@@ -3,7 +3,8 @@ PY := PYTHONPATH=src python
 
 .PHONY: ci check tier1 fleet network sched collect fast bench-fleet \
         bench-network bench-qos bench-replay bench-sim bench-all \
-        fleet-smoke qos-smoke quantized-smoke replay-smoke obs-smoke
+        fleet-smoke qos-smoke quantized-smoke replay-smoke obs-smoke \
+        scale-smoke
 
 # collect + the fast check tier first (fail fast on the most-churned
 # layers), then the full tier-1 run.
@@ -15,7 +16,7 @@ ci: collect check tier1
 # and observability smokes with determinism checks (no BENCH_*.json
 # written).
 check: sched network fast fleet-smoke qos-smoke quantized-smoke \
-       replay-smoke obs-smoke
+       replay-smoke obs-smoke scale-smoke
 
 # Fail fast on collection regressions (e.g. a hard import of an
 # uninstalled dependency aborting whole test modules).
@@ -94,6 +95,13 @@ qos-smoke:
 # contention level as the full run, no JSON).
 replay-smoke:
 	$(PY) benchmarks/replay_policy_search.py --smoke --check-determinism --out ""
+
+# Fleet-scale smoke used by `make check`: one 64-replica/512-tenant
+# compact-retention cell with a conservative events/sec floor and a
+# sustained peak-heap ceiling (floors ~3x slack vs measured; see
+# benchmarks/sim_profile.py).
+scale-smoke:
+	$(PY) benchmarks/sim_profile.py --scale-smoke
 
 # Observability smoke used by `make check`: a tiny traced burst must
 # export a valid Perfetto JSON spanning >= 3 tiers and fingerprint

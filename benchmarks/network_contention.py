@@ -19,6 +19,13 @@ split than the raw ones (their bytes fit through the contended trunk
 earlier). ``--smoke`` runs just the uncontended pair as a fast CI
 check.
 
+A **burst return-path series** (`return_path` in BENCH_network.json)
+drains the same fleet burst with return-path delivery modeling off
+(default) vs on: on, drained activation bytes are charged on the tenant
+NIC + WAN trunk as one concurrent flow batch per round, and the series
+shows the measured return bandwidth re-deciding a *deeper* split under
+8-tenant contention — invisible when the return direction is unmodeled.
+
 Every tenant fine-tunes the same workload through the
 :class:`repro.api.HapiCluster` facade with the flow-level network fabric
 (`.with_network`): activation pulls are flows under deterministic
@@ -193,6 +200,78 @@ def quantized_sweep(*, trunk_bw: float, seed: int,
     }
 
 
+def return_path_sweep(*, trunk_bw: float, seed: int,
+                      tenants: List[int] = (1, 4, 8)) -> Dict:
+    """The burst **return-path series**: the same fleet burst with
+    return-path delivery modeling off (default) vs on
+    (``HapiCluster.with_return_path``). On, every drain round's
+    activation bytes resolve as one ``transfer_concurrent`` batch over
+    the tenants' ``wan{tenant}`` NICs + shared trunk, so delivery
+    completes *after* serving under contention.
+
+    Per tenant count the row records the serve vs delivery makespans
+    and what Algorithm 1 would re-decide with the *measured* return
+    bandwidth: uncontended, delivery keeps the nominal-bandwidth split;
+    at 8 tenants the shared trunk throttles the measured bandwidth so
+    the re-decided split must migrate deeper into the storage tier
+    (``deeper_resplit_under_contention_ok``) — the effect the default-
+    off mode cannot see (its rows re-decide the initial split)."""
+    rows = []
+    for n in tenants:
+        row: Dict = {"n_tenants": n}
+        for on in (False, True):
+            c = (HapiCluster(seed=seed)
+                 .with_servers(4, n_accelerators=2, flops_per_accel=197e12)
+                 .with_dataset("imagenet", n_samples=4000, object_size=500)
+                 .with_network(NetworkSpec(trunk_bandwidth=trunk_bw))
+                 .with_return_path(on)
+                 .build())
+            hapi = HapiConfig(network_bandwidth=trunk_bw)
+            split0 = c.split_for(MODEL, TRAIN_BATCH, hapi).split_index
+            for t in range(n):
+                c.submit_burst("imagenet", MODEL, tenant=t,
+                               train_batch=TRAIN_BATCH, hapi=hapi)
+            resps = c.drain()
+            serve_end = max(r.finished for r in resps)
+            deliver_end = max(r.delivered if r.delivered is not None
+                              else r.finished for r in resps)
+            resplits = []
+            for t in range(n):
+                mine = [r for r in resps if r.tenant == t]
+                nbytes = sum(r.act_bytes for r in mine)
+                if on:
+                    t0 = min(r.finished for r in mine)
+                    t1 = max(r.delivered for r in mine)
+                    eff_bw = nbytes / (t1 - t0) if t1 > t0 else trunk_bw
+                else:
+                    eff_bw = trunk_bw      # blind: nominal bandwidth
+                resplits.append(c.split_for(
+                    MODEL, TRAIN_BATCH,
+                    HapiConfig(network_bandwidth=eff_bw)).split_index)
+            key = "on" if on else "off"
+            row[key] = {
+                "deliver_events": c.sim.log.count("deliver"),
+                "serve_makespan": serve_end,
+                "delivery_makespan": deliver_end,
+                "delivery_lag": deliver_end - serve_end,
+                "resplits": sorted(resplits),
+            }
+            row["split_initial"] = split0
+        rows.append(row)
+        print(f"return-path n={n}  off: resplits {row['off']['resplits']}  "
+              f"on: resplits {row['on']['resplits']}, "
+              f"{row['on']['deliver_events']} deliveries, "
+              f"delivery lag {row['on']['delivery_lag']:.2f}s")
+    big = rows[-1]
+    deeper_ok = (max(big["on"]["resplits"]) > big["split_initial"]
+                 and all(s == big["split_initial"]
+                         for s in big["off"]["resplits"]))
+    return {
+        "rows": rows,
+        "deeper_resplit_under_contention_ok": deeper_ok,
+    }
+
+
 def sweep(tenants: List[int], *, trunk_bw: float, seed: int) -> List[Dict]:
     rows = []
     for n in tenants:
@@ -209,7 +288,7 @@ def sweep(tenants: List[int], *, trunk_bw: float, seed: int) -> List[Dict]:
 def write_json(path: str, rows: List[Dict], *, seed: int, trunk_gbps: float,
                fairness_ok: bool, more_pushdown: bool, determinism,
                weighted: List[Dict], weighted_ok: bool,
-               quantized: Dict) -> None:
+               quantized: Dict, return_path: Dict) -> None:
     """BENCH_network.json: the contention-behavior trajectory record."""
     payload = {
         "benchmark": "network_contention",
@@ -224,6 +303,7 @@ def write_json(path: str, rows: List[Dict], *, seed: int, trunk_gbps: float,
         "weighted_ok": weighted_ok,          # QoS shares track weights <=10%
         "weighted": weighted,                # gold/bronze trunk-share series
         "quantized": quantized,              # int8 wire-path series
+        "return_path": return_path,          # burst return-path series
         "rows": [
             {k: v for k, v in r.items() if k != "event_log"}
             for r in rows
@@ -270,6 +350,10 @@ def main(argv=None) -> int:
                     is not False)
     print(f"quantized series ok (>=1.8x uncontended reduction, shallower "
           f"contended split): {quantized_ok}")
+    return_path = return_path_sweep(trunk_bw=trunk_bw, seed=args.seed)
+    return_path_ok = return_path["deeper_resplit_under_contention_ok"]
+    print(f"return-path series ok (measured return bandwidth re-decides a "
+          f"deeper split under contention): {return_path_ok}")
 
     fairness_ok = all(r["fairness_max_dev"] <= 0.10 for r in rows)
     print(f"per-tenant throughput within 10% of fair share: {fairness_ok}")
@@ -294,8 +378,9 @@ def main(argv=None) -> int:
         write_json(args.out, rows, seed=args.seed, trunk_gbps=args.trunk_gbps,
                    fairness_ok=fairness_ok, more_pushdown=more_pushdown,
                    determinism=same, weighted=weighted,
-                   weighted_ok=weighted_ok, quantized=quantized)
-    ok = (fairness_ok and weighted_ok and quantized_ok
+                   weighted_ok=weighted_ok, quantized=quantized,
+                   return_path=return_path)
+    ok = (fairness_ok and weighted_ok and quantized_ok and return_path_ok
           and more_pushdown is not False and same is not False)
     return 0 if ok else 1
 

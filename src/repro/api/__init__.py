@@ -23,6 +23,7 @@ from repro.api.policies import (
     FabricAwareRouting,
     FabricAwareScaling,
     FifoScheduling,
+    HashRouting,
     LearnedPlacement,
     LeastLoadedRouting,
     PLACEMENT_POLICIES,
@@ -47,7 +48,7 @@ _CLUSTER_EXPORTS = ("HapiCluster", "TenantSpec", "TenantHandle", "ClusterReport"
 
 __all__ = list(_CLUSTER_EXPORTS) + [
     "RoutingPolicy", "ReplicaAwareRouting", "LeastLoadedRouting",
-    "FabricAwareRouting",
+    "FabricAwareRouting", "HashRouting",
     "PlacementPolicy", "RoundRobinPlacement", "DemandAwarePlacement",
     "LearnedPlacement",
     "ScalingPolicy", "QueueDepthScaling", "SloScaling", "FabricAwareScaling",

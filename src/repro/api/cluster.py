@@ -42,7 +42,7 @@ from repro.config import HapiConfig
 from repro.core.profiler import LayerProfile, profile_layered
 from repro.core.splitter import SplitDecision, choose_split
 from repro.cos.client import EpochResult, EpochRun, HapiClient
-from repro.cos.clock import Simulator
+from repro.cos.clock import DEFAULT_LOG_TAIL, Simulator
 from repro.cos.fleet import AutoscalePolicy, HapiFleet, TenantStats
 from repro.cos.network import (NetworkFabric, NetworkSpec, run_concurrently,
                                wan_link)
@@ -195,6 +195,10 @@ class HapiCluster:
         self._network: Optional[NetworkSpec] = None
         self._fabric: Optional[NetworkFabric] = None
         self._tracing = True
+        self._retention = "full"
+        self._log_tail = DEFAULT_LOG_TAIL
+        self._return_path = False
+        self._return_bandwidth: Optional[float] = None
 
     # -- builder ---------------------------------------------------------------
     def _check_mutable(self, what: str) -> None:
@@ -319,6 +323,36 @@ class HapiCluster:
         self._tracing = enabled
         return self
 
+    def with_retention(self, mode: str,
+                       tail: int = DEFAULT_LOG_TAIL) -> "HapiCluster":
+        """Event-log retention policy. ``"full"`` (default) keeps every
+        event materialized — golden digests, replay recording and
+        post-hoc log mining all work. ``"compact"`` keeps a bounded tail
+        (``tail`` events) plus a streaming digest and O(1) per-kind
+        counters, and bounds the tracer — the scale-out mode for
+        100s-of-replicas sweeps where the full log would dominate RSS.
+        Same seed in either mode produces identical ``stream_digest()``,
+        metrics totals and replay decisions."""
+        self._check_mutable("with_retention")
+        if mode not in ("full", "compact"):
+            raise ValueError(f"retention must be 'full' or 'compact', "
+                             f"got {mode!r}")
+        self._retention = mode
+        self._log_tail = tail
+        return self
+
+    def with_return_path(self, enabled: bool = True,
+                         bandwidth: Optional[float] = None) -> "HapiCluster":
+        """Model the burst return path: after each drain round the served
+        activation bytes are pulled back over the tenants' NICs (and the
+        shared trunk under :meth:`with_network`) as concurrent flows,
+        extending per-tenant finish times and spans. Off by default —
+        the historical model hands activations over for free."""
+        self._check_mutable("with_return_path")
+        self._return_path = enabled
+        self._return_bandwidth = bandwidth
+        return self
+
     def with_executor(self, model_key: str, fn: Callable) -> "HapiCluster":
         """Register a live JAX forward ``fn(payload, split, cos_batch)``
         fleet-wide (current and future replicas)."""
@@ -332,7 +366,8 @@ class HapiCluster:
         """Materialize the deployment; idempotent."""
         if self._fleet is not None:
             return self
-        sim = Simulator(self.seed)
+        sim = Simulator(self.seed, retention=self._retention,
+                        log_tail=self._log_tail)
         sim.tracer.enabled = self._tracing
         store = ObjectStore(placement=self._placement, **self._storage_kwargs)
         self._fleet = HapiFleet(
@@ -341,6 +376,8 @@ class HapiCluster:
             autoscale=self._autoscale,
             routing=self._routing, placement=self._placement,
             scaling=self._scaling,
+            return_path=self._return_path,
+            return_bandwidth=self._return_bandwidth,
             **self._server_kwargs,
         )
         if self._network is not None:

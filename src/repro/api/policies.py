@@ -110,6 +110,21 @@ class LeastLoadedRouting:
 
 
 @dataclass
+class HashRouting:
+    """Stateless O(1) routing for scale-out sweeps: request id modulo the
+    alive-replica count. No queue scans, no locality — every replica gets
+    a uniform slice of the stream, which is exactly what a 100s-of-replicas
+    throughput experiment wants when routing overhead (not placement
+    quality) is the variable under study."""
+
+    name: str = "hash"
+
+    def route(self, fleet: "HapiFleet", req: "PostRequest",
+              alive: List["HapiServer"]) -> "HapiServer":
+        return alive[req.req_id % len(alive)]
+
+
+@dataclass
 class FabricAwareRouting(ReplicaAwareRouting):
     """Replica-aware routing that also watches the storage network
     (ROADMAP: fold fabric state into routing): among the co-located
@@ -589,6 +604,7 @@ ROUTING_POLICIES = {
     "replica-aware": ReplicaAwareRouting,
     "least-loaded": LeastLoadedRouting,
     "fabric-aware": FabricAwareRouting,
+    "hash": HashRouting,
 }
 PLACEMENT_POLICIES = {
     "round-robin": RoundRobinPlacement,
@@ -607,7 +623,7 @@ SCHEDULER_POLICIES = {
 
 __all__ = [
     "RoutingPolicy", "ReplicaAwareRouting", "LeastLoadedRouting",
-    "FabricAwareRouting",
+    "FabricAwareRouting", "HashRouting",
     "PlacementPolicy", "RoundRobinPlacement", "DemandAwarePlacement",
     "LearnedPlacement", "learned_features",
     "ScalingPolicy", "QueueDepthScaling", "SloScaling", "FabricAwareScaling",

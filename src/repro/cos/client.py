@@ -144,7 +144,10 @@ class HapiClient:
         if self.sim is not None:
             self.accel.attach(self.sim)
             self.link.attach(self.sim)
-        self.log = EventLog()
+        # Private iteration log adopts the shared simulator's retention.
+        self.log = EventLog(retention=self.sim.log.retention,
+                            tail=self.sim.log.tail) if self.sim is not None \
+            else EventLog()
         # Rendezvous for responses drained by the "wrong" tenant on a
         # shared server/fleet: strangers we drain are stashed here for
         # their owner, and we claim our own strays from it — never

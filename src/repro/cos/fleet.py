@@ -54,7 +54,7 @@ from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple, Union
 
 from repro.api.policies import (
     PlacementPolicy,
@@ -73,6 +73,21 @@ from repro.cos.scheduler import (
     WdrrScheduling,
 )
 from repro.cos.server import HapiServer, PostRequest, PostResponse
+
+
+class _ServedRequest(NamedTuple):
+    """What the fleet keeps of a finished request under compact
+    retention: exactly the fields :func:`repro.replay.trace.record_trace`
+    reads, at a fraction of a full :class:`PostRequest` — the intake map
+    must not pin every profile-bearing request a long run ever served."""
+
+    req_id: int
+    tenant: int
+    object_name: str
+    model_key: str
+    arrival: float
+    network_weight: float
+    compute_weight: float
 
 
 @dataclass(frozen=True)
@@ -134,6 +149,8 @@ class HapiFleet:
         scaling: Optional[ScalingPolicy] = None,
         scheduler: Optional[Union[SchedulerPolicy, ComputeScheduler]] = None,
         coalescing: Optional[bool] = None,
+        return_path: bool = False,
+        return_bandwidth: Optional[float] = None,
         **server_kwargs,
     ) -> None:
         self.sim = sim if sim is not None else Simulator(seed)
@@ -179,7 +196,11 @@ class HapiFleet:
         ]
         self.cordoned: set = set()                   # server ids draining out
         self._inflight: Dict[int, int] = {}          # req_id -> server index
-        self._req_by_id: Dict[int, PostRequest] = {}
+        # Intake map: full PostRequest while in flight; under compact
+        # retention a finished request is slimmed to a _ServedRequest
+        # (record_trace still reads it; the profile reference is freed).
+        self._req_by_id: Dict[int, Union[PostRequest, _ServedRequest]] = {}
+        self._slim_done = self.sim.log.retention == "compact"
         self.reissued = 0
         self.rejected: List[int] = []
         # Cross-tenant response rendezvous (same contract as
@@ -189,6 +210,13 @@ class HapiFleet:
         self.served_by_server: Dict[int, int] = {}
         self.tenant_stats: Dict[int, TenantStats] = {}
         self._vtime = 0.0                            # fleet-wide virtual time
+        # Burst return path (default off, byte-identical when off):
+        # activation bytes of burst responses are pulled back over the
+        # owning tenant's NIC + shared WAN trunk per drain round, instead
+        # of materializing instantly at the client. Needs a fabric.
+        self.return_path = return_path
+        self.return_bandwidth = return_bandwidth
+        self.return_ports: Dict[int, object] = {}    # tenant -> FabricPort
 
     # -- topology ------------------------------------------------------------
     def _alive(self) -> List[HapiServer]:
@@ -382,18 +410,40 @@ class HapiFleet:
         keeps submission order). Returns #dispatched."""
         return self.scheduler.dispatch(self)
 
-    def _dispatch_one(self, req: PostRequest) -> int:
-        alive = self._routable()
+    def _dispatch_one(self, req: PostRequest,
+                      alive: Optional[List[HapiServer]] = None) -> int:
+        # The scheduler passes one routable-set snapshot for a whole
+        # dispatch round (nothing inside the loop changes topology);
+        # direct callers let us compute it here.
+        if alive is None:
+            alive = self._routable()
         if not alive:
             raise ConnectionError("hapi fleet down")
         server = self.routing.route(self, req, alive)
         server.submit(req)
-        self._inflight[req.req_id] = self.servers.index(server)
+        # server_id == position in self.servers by construction (servers
+        # are only ever appended), so no O(n_servers) index() scan.
+        self._inflight[req.req_id] = server.server_id
         self.sim.record(max(self._vtime, req.arrival), "route",
                         f"t{req.tenant} {req.object_name} -> s{server.server_id}")
         return 1
 
+    def _slim(self, rid: int) -> None:
+        """Compact retention: replace a finished request's intake entry
+        with the trace-record fields only (frees the profile-bearing
+        PostRequest)."""
+        req = self._req_by_id.get(rid)
+        if type(req) is PostRequest:
+            self._req_by_id[rid] = _ServedRequest(
+                req.req_id, req.tenant, req.object_name, req.model_key,
+                req.arrival, req.network_weight, req.compute_weight)
+
     def _reissue_lost(self) -> None:
+        # O(n_servers) liveness check before the O(inflight) scan: with
+        # no dead replica nothing can be lost, and the drain loop calls
+        # this every round while tens of thousands of posts are inflight.
+        if all(s.alive for s in self.servers):
+            return
         lost = sorted(rid for rid, si in self._inflight.items()
                       if not self.servers[si].alive)
         for rid in lost:
@@ -473,26 +523,44 @@ class HapiFleet:
             self._retire_drained()     # cordoned replicas that ran dry
             self._re_replicate()       # placement tick: demand-aware
             self.scheduler.coalesce(self)   # warm-replica consolidation
-            active = [s for s in self._alive() if s.queue]
-            if not active:
+            # Least-advanced live replica with queued work, lowest id on
+            # ties — a manual strict-less scan (one pass, no list builds
+            # or lambda-key min()) picking exactly the replica the old
+            # min(active, key=(server_now, server_id)) chose.
+            s = None
+            sn = 0.0
+            get_now = server_now.get
+            for cand in self.servers:
+                if cand.alive and cand.queue:
+                    t_c = get_now(cand.server_id, now)
+                    if s is None or t_c < sn:
+                        s, sn = cand, t_c
+            if s is None:
                 # in-flight on dead replicas only: loop re-issues them
                 continue
-            s = min(active, key=lambda s: (server_now.get(s.server_id, now),
-                                           s.server_id))
-            sn = server_now.get(s.server_id, now)
             served, server_now[s.server_id] = s.drain_round(sn)
             queued_ids = {r.req_id for r in s.queue}
             for resp in served:
                 self._inflight.pop(resp.req_id, None)
                 self._account(resp)
+                if self._slim_done:
+                    self._slim(resp.req_id)
                 responses.append(resp)
+            if self.return_path and served:
+                self._deliver(served)
             # A replica can reject a request that cannot fit even alone
             # (paper OOM 'X'): it leaves the queue with no response.
-            sidx = self.servers.index(s)
-            for rid in sorted(self._inflight):
-                if self._inflight[rid] == sidx and rid not in queued_ids:
-                    del self._inflight[rid]
-                    self.rejected.append(rid)
+            # Filter this server's stale entries first, then sort just
+            # those — same ids in the same order as sorting the whole
+            # in-flight table, without the per-round full-table sort.
+            sidx = s.server_id
+            stale = [rid for rid, srv in self._inflight.items()
+                     if srv == sidx and rid not in queued_ids]
+            for rid in sorted(stale):
+                del self._inflight[rid]
+                if self._slim_done:
+                    self._slim(rid)
+                self.rejected.append(rid)
         # Controller tick on the now-idle fleet (lets scale-down and
         # demand-aware re-replication happen between traffic bursts, not
         # only under load — a burst served in one round still updates
@@ -501,6 +569,66 @@ class HapiFleet:
         self._retire_drained()
         self._re_replicate()
         return responses
+
+    # -- burst return path -------------------------------------------------------
+    def _return_port(self, tenant: int):
+        """The tenant's NIC for pulling activations back (the same
+        ``wan{tenant}`` fabric port its client would use; created at
+        ``return_bandwidth`` — nominal by default — when the tenant has
+        no client). None on fabric-less deployments."""
+        port = self.return_ports.get(tenant)
+        if port is None:
+            fabric = self.fabric
+            if fabric is None:
+                return None
+            port = fabric.ports.get(f"wan{tenant}")
+            if port is None:
+                bw = self.return_bandwidth
+                if bw is None:
+                    from repro.config import HapiConfig
+
+                    bw = HapiConfig().network_bandwidth
+                port = fabric.tenant_port(tenant, bandwidth=bw)
+            self.return_ports[tenant] = port
+        return port
+
+    def _deliver(self, responses: List[PostResponse]) -> None:
+        """Charge one drain round's burst activations on the wire: the
+        round's responses resolve as one ``transfer_concurrent`` batch
+        (per-tenant NIC serialization + weighted WAN-trunk sharing), so
+        serving sweeps are honest about the return direction too.
+        Delivery overlaps the next round's serving — it extends each
+        request's span and the tenant's finish time, not ``_vtime``."""
+        flows = []
+        resps = []
+        for resp in responses:
+            if resp.act_bytes <= 0:
+                continue
+            port = self._return_port(resp.tenant)
+            if port is None:
+                continue
+            flows.append((port, resp.finished, resp.act_bytes))
+            resps.append(resp)
+        if not flows:
+            return
+        results = self.fabric.transfer_concurrent(flows)
+        tr = self.sim.tracer
+        mx = self.sim.metrics
+        for resp, (start, end) in zip(resps, results):
+            resp.delivered = end
+            self.sim.record(end, "deliver",
+                            f"t{resp.tenant} {resp.object_name} "
+                            f"{resp.act_bytes:.3e}")
+            tr.emit("wire.transfer", start, end, tier="network",
+                    track=self.return_ports[resp.tenant].name,
+                    parent=resp.span_id,
+                    labels=(("tenant", str(resp.tenant)),
+                            ("bytes", f"{resp.act_bytes:.0f}")))
+            tr.extend(resp.span_id, end)
+            mx.observe("stage_seconds", end - start, stage="wire")
+            ts = self.tenant_stats.get(resp.tenant)
+            if ts is not None and end > ts.last_finish:
+                ts.last_finish = end
 
     def _account(self, resp: PostResponse) -> None:
         self._vtime = max(self._vtime, resp.finished)
@@ -538,3 +666,11 @@ class HapiFleet:
     def scale_events(self) -> List[Tuple[float, str, str]]:
         return self.sim.log.filter_many(
             ("scale-up", "scale-down", "cordon", "kill", "restart"))
+
+    def scale_event_count(self) -> int:
+        """Total elasticity events without materializing the hit list
+        (``EventLog.count`` — also correct under compact retention,
+        where :meth:`scale_events` only sees the retained tail)."""
+        log = self.sim.log
+        return sum(log.count(k) for k in
+                   ("scale-up", "scale-down", "cordon", "kill", "restart"))

@@ -50,6 +50,8 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.cos.clock import Link, Simulator
 
 _EPS = 1e-12
@@ -384,45 +386,81 @@ class NetworkFabric:
 
     def _max_min(self, active: List[_Flow], t: float) -> Dict[int, float]:
         """Weighted max-min water-filling over the links the active flows
-        touch. Repeatedly freeze the flows of the bottleneck link — the
-        one with the smallest fair share *per unit weight*
-        (residual / Σweights of its unfrozen flows) — at that unit share
-        scaled by each flow's weight. All weights 1 reduces to the
-        classic equal-share fill bit-for-bit (Σ of ones is exactly the
-        count, and ``share * 1.0`` is ``share``). Deterministic: links
-        visited in sorted key order, flows in index order."""
+        touch, vectorized over numpy arrays (flow weights, link residuals,
+        flow↔link incidence). Repeatedly freeze the flows of the
+        bottleneck link — the one with the smallest fair share *per unit
+        weight* (residual / Σweights of its unfrozen flows) — at that
+        unit share scaled by each flow's weight. All weights 1 reduces to
+        the classic equal-share fill bit-for-bit (Σ of ones is exactly
+        the count, and ``share * 1.0`` is ``share``). Deterministic:
+        links visited in sorted key order, flows in index order.
+
+        Rates are **bitwise identical** to the scalar reference loop
+        (kept as the oracle in tests/test_network.py and property-tested
+        on random flow sets): per-link weight sums use ``np.bincount``
+        and residual updates ``np.subtract.at`` — both accumulate
+        sequentially in input order, exactly like the scalar sums — and
+        the bottleneck selection runs over Python-float shares with the
+        same ``_EPS`` comparison chain. Edges are laid out flow-major,
+        port before trunk, matching the scalar update order."""
+        n = len(active)
+        # Link universe in first-seen order; sorted() below fixes the
+        # selection order exactly like the scalar `sorted(caps)`.
         caps: Dict[Tuple[str, str], float] = {}
-        members: Dict[Tuple[str, str], List[_Flow]] = {}
-
-        def add(key: Tuple[str, str], cap: float, f: _Flow) -> None:
-            caps.setdefault(key, cap)
-            members.setdefault(key, []).append(f)
-
         for f in active:
-            add(("port", f.port.name), f.port.bandwidth, f)
-            if f.port.trunk is not None:
-                add(("trunk", f.port.trunk.name), f.port.trunk.residual(t), f)
-        rates: Dict[int, float] = {f.idx: 0.0 for f in active}
-        frozen: set = set()
-        residual = dict(caps)
-        while len(frozen) < len(active):
-            best = None
-            for key in sorted(caps):
-                un = [f for f in members[key] if f.idx not in frozen]
-                if not un:
+            pk = ("port", f.port.name)
+            if pk not in caps:
+                caps[pk] = f.port.bandwidth
+            trunk = f.port.trunk
+            if trunk is not None:
+                tk = ("trunk", trunk.name)
+                if tk not in caps:
+                    caps[tk] = trunk.residual(t)
+        skeys = sorted(caps)
+        col = {k: j for j, k in enumerate(skeys)}
+        n_links = len(skeys)
+        residual = np.array([caps[k] for k in skeys], dtype=np.float64)
+        w = np.empty(n, dtype=np.float64)
+        ef: List[int] = []
+        el: List[int] = []
+        for i, f in enumerate(active):
+            w[i] = f.weight
+            ef.append(i)
+            el.append(col[("port", f.port.name)])
+            trunk = f.port.trunk
+            if trunk is not None:
+                ef.append(i)
+                el.append(col[("trunk", trunk.name)])
+        edge_flow = np.asarray(ef, dtype=np.intp)
+        edge_link = np.asarray(el, dtype=np.intp)
+        edge_w = w[edge_flow]
+        rates = np.zeros(n, dtype=np.float64)
+        unfrozen = np.ones(n, dtype=bool)
+        remaining = n
+        while remaining:
+            em = unfrozen[edge_flow]
+            links = edge_link[em]
+            wsum = np.bincount(links, weights=edge_w[em], minlength=n_links)
+            cnt = np.bincount(links, minlength=n_links)
+            best_share: Optional[float] = None
+            best_j = -1
+            for j in range(n_links):
+                if not cnt[j]:
                     continue
-                share = max(residual[key], 0.0) / sum(f.weight for f in un)
-                if best is None or share < best[0] - _EPS:
-                    best = (share, key, un)
-            assert best is not None
-            share, _key, un = best
-            for f in un:
-                rates[f.idx] = share * f.weight
-                frozen.add(f.idx)
-                residual[("port", f.port.name)] -= share * f.weight
-                if f.port.trunk is not None:
-                    residual[("trunk", f.port.trunk.name)] -= share * f.weight
-        return rates
+                share = max(float(residual[j]), 0.0) / float(wsum[j])
+                if best_share is None or share < best_share - _EPS:
+                    best_share, best_j = share, j
+            assert best_j >= 0
+            sel = edge_flow[em][links == best_j]
+            rates[sel] = best_share * w[sel]
+            unfrozen[sel] = False
+            remaining -= len(sel)
+            sel_mask = np.zeros(n, dtype=bool)
+            sel_mask[sel] = True
+            sel_edges = sel_mask[edge_flow]
+            np.subtract.at(residual, edge_link[sel_edges],
+                           rates[edge_flow[sel_edges]])
+        return {f.idx: float(rates[i]) for i, f in enumerate(active)}
 
 
 def measure_trunk_shares(weights: Sequence[float], trunk_bandwidth: float,

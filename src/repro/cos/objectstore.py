@@ -144,16 +144,28 @@ class ObjectStore:
         request's causal tree."""
         obj = self.objects[oname]
         replicas = self._placement[oname]
-        node = min(
-            (self.nodes[r] for r in replicas), key=lambda nd: (nd.busy_until, nd.name)
-        )
+        # Manual first-minimal scan on (busy_until, name) — the lambda-key
+        # min() was a per-request hotspot at fleet scale; strict-less
+        # updates keep exactly min()'s first-of-equals choice.
+        nodes = self.nodes
+        node = nodes[replicas[0]]
+        bu, bn = node.busy_until, node.name
+        for ridx in replicas:
+            nd = nodes[ridx]
+            nbu = nd.busy_until
+            if nbu < bu or (nbu == bu and nd.name < bn):
+                node, bu, bn = nd, nbu, nd.name
         s, ready = node.transfer(t, obj.nbytes)
         if self.sim is not None:
             self.sim.record(ready, "store.read", f"{oname}@{node.name}")
             tr = self.sim.tracer
-            tr.emit("storage.read", s, ready, tier="storage",
-                    track=node.name, parent=parent,
-                    labels=(("object", oname),))
+            # emit_fast: the read span's id is never used (children hang
+            # off the request span), so the deferred raw-tuple path keeps
+            # per-request tracing off the storage hot loop. Materialization
+            # preserves order, so ids and digests match the eager path.
+            tr.emit_fast("storage.read", s, ready, "storage",
+                         node.name, parent=parent,
+                         labels=(("object", oname),))
             mx = self.sim.metrics
             mx.observe("stage_seconds", ready - s, stage="storage")
         return obj, ready

@@ -205,6 +205,10 @@ class ComputeScheduler:
             else WdrrScheduling()
         self.coalescing = coalescing
         self.pending: Dict[int, Deque["PostRequest"]] = {}
+        # Running size of all pending queues: at fleet scale the tenant
+        # dict holds thousands of (mostly drained) deques, so the
+        # per-round emptiness probes must not walk it.
+        self._npending = 0
         self.weights: Dict[int, float] = {}
         # Stateless-reload accounting (charged vs skipped-by-warm-lease):
         # the coalescing benchmark compares `reload_bytes` across runs.
@@ -230,12 +234,13 @@ class ComputeScheduler:
     # -- pending queues --------------------------------------------------------
     def enqueue(self, req: "PostRequest") -> None:
         self.pending.setdefault(req.tenant, deque()).append(req)
+        self._npending += 1
 
     def pending_total(self) -> int:
-        return sum(len(q) for q in self.pending.values())
+        return self._npending
 
     def has_pending(self) -> bool:
-        return any(self.pending.values())
+        return self._npending > 0
 
     # -- dispatch --------------------------------------------------------------
     def dispatch(self, fleet: "HapiFleet") -> int:
@@ -247,10 +252,16 @@ class ComputeScheduler:
             return 0
         weights = {t: self.weight_of(t) for t in self.pending}
         ordered = self.policy.order(self.pending, weights)
+        # Every policy's order() consumes the queues it returns from.
+        self._npending -= len(ordered)
         n = 0
+        # One routable-set snapshot for the whole round: dispatching
+        # never changes topology, and rebuilding the list per request
+        # is O(requests x servers) at fleet scale.
+        alive = fleet._routable()
         for i, req in enumerate(ordered):
             try:
-                n += fleet._dispatch_one(req)
+                n += fleet._dispatch_one(req, alive)
             except Exception:
                 # Routing failed (e.g. the whole fleet is down): the
                 # policy already consumed the queues, so put this and
@@ -313,7 +324,7 @@ class ComputeScheduler:
                                                   s.server_id))
                 src.queue.remove(req)
                 dst.submit(req)
-                fleet._inflight[req.req_id] = fleet.servers.index(dst)
+                fleet._inflight[req.req_id] = dst.server_id
                 self.coalesced += 1
                 moved += 1
                 fleet.sim.record(

@@ -20,8 +20,9 @@ restarted or horizontally scaled by just adding queues. ``kill()`` +
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -34,7 +35,7 @@ from repro.cos.objectstore import ObjectStore
 from repro.cos.scheduler import ComputeScheduler
 
 
-@dataclass
+@dataclass(slots=True)
 class PostRequest:
     req_id: int
     tenant: int
@@ -53,7 +54,7 @@ class PostRequest:
                                  # (set by fleet intake; -1 = untraced)
 
 
-@dataclass
+@dataclass(slots=True)
 class PostResponse:
     req_id: int
     tenant: int
@@ -66,20 +67,58 @@ class PostResponse:
     finished: float
     server_id: int = 0             # replica that served the request
     span_id: int = -1              # causal-tree root carried from the request
+    delivered: Optional[float] = None  # return-path wire completion (None
+                                       # unless the fleet models delivery)
 
     @property
     def queue_delay(self) -> float:
         return self.started - self.arrival
 
 
-@dataclass
-class _Lease:
+class TenantQueue(List[PostRequest]):
+    """A request queue (list-compatible: the scheduler removes served
+    requests in place, rebalancing pops, kill clears) that additionally
+    maintains per-tenant depth counters, so the routing hot path's
+    ``tenant_queue_depth`` — called once per candidate replica per
+    request — is an O(1) dict lookup instead of an O(queue) scan."""
+
+    __slots__ = ("_by_tenant",)
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._by_tenant: Dict[int, int] = {}
+
+    def append(self, req: PostRequest) -> None:
+        bt = self._by_tenant
+        bt[req.tenant] = bt.get(req.tenant, 0) + 1
+        list.append(self, req)
+
+    def remove(self, req: PostRequest) -> None:
+        list.remove(self, req)
+        self._by_tenant[req.tenant] -= 1
+
+    def pop(self, index: int = -1) -> PostRequest:
+        req = list.pop(self, index)
+        self._by_tenant[req.tenant] -= 1
+        return req
+
+    def clear(self) -> None:
+        list.clear(self)
+        self._by_tenant.clear()
+
+    def tenant_depth(self, tenant: int) -> int:
+        return self._by_tenant.get(tenant, 0)
+
+
+class _Lease(NamedTuple):
     end: float
     nbytes: float
     accel: int
     # What the lease holds resident: while active, requests for the same
     # model with a split no deeper than `split` find the weights already
-    # in HBM — the coalescer's "warm replica" signal.
+    # in HBM — the coalescer's "warm replica" signal. (NamedTuple: one
+    # lease per executed request, never mutated — tuple construction is
+    # far cheaper than a dataclass __init__ on the serve hot path.)
     model_key: str = ""
     split: int = 0
 
@@ -115,7 +154,7 @@ class HapiServer:
         self.b_min = b_min
         self.decoupled = decoupled
         self.mxu_efficiency = mxu_efficiency
-        self.queue: List[PostRequest] = []
+        self.queue: TenantQueue = TenantQueue()
         self.leases: List[_Lease] = []
         # Served responses a *different* caller drained on the owner's
         # behalf (shared-server bursts): clients stash strangers here and
@@ -123,8 +162,21 @@ class HapiServer:
         # on the server because it is the rendezvous all tenants share.
         self.unclaimed: Dict[int, PostResponse] = {}
         self.executors: Dict[str, Callable] = {}
-        self.log = EventLog()
-        self.adapt_results: List[AdaptResult] = []
+        # The private per-server log adopts the shared simulator's
+        # retention mode: a compact fleet must not regrow unbounded
+        # traces one replica at a time. The per-replica tail is kept
+        # small — at 100s of replicas, N x tail dominates the shared
+        # log's own window otherwise.
+        self.log = EventLog(retention=sim.log.retention,
+                            tail=min(sim.log.tail, 32)
+                            if sim.log.retention == "compact"
+                            else sim.log.tail) if sim is not None \
+            else EventLog()
+        # Adaptation history: full list by default (Table 5 stats read
+        # it); a compact-retention fleet keeps a bounded recent window —
+        # per-replica unbounded growth defeats the bounded log.
+        compact = sim is not None and sim.log.retention == "compact"
+        self.adapt_results = deque(maxlen=64) if compact else []
         self._rr = 0
         self.alive = True
 
@@ -269,19 +321,24 @@ class HapiServer:
                             f"s{self.server_id} t{req.tenant} "
                             f"{req.object_name} b={cos_batch}")
             tr = self.sim.tracer
-            tr.emit("cos.compute", start, t_compute_end, tier="compute",
-                    track=accel.name, parent=req.span_id,
-                    labels=(("tenant", str(req.tenant)),
-                            ("model", req.model_key),
-                            ("split", str(req.split)),
-                            ("batch", str(cos_batch))))
+            # emit_fast: these spans parent nothing (ids unused), so the
+            # deferred path — one raw tuple now, Span construction and
+            # validation on first query — keeps per-request tracing off
+            # the serve hot loop. Materialization preserves order, so
+            # digests match the eager path.
+            tr.emit_fast("cos.compute", start, t_compute_end, "compute",
+                         accel.name, parent=req.span_id,
+                         labels=(("tenant", str(req.tenant)),
+                                 ("model", req.model_key),
+                                 ("split", str(req.split)),
+                                 ("batch", str(cos_batch))))
             if load_time > 0.0:
-                tr.emit("model.load", t_compute_end, end, tier="compute",
-                        track=accel.name, parent=req.span_id,
-                        labels=(("model", req.model_key),))
+                tr.emit_fast("model.load", t_compute_end, end, "compute",
+                             accel.name, parent=req.span_id,
+                             labels=(("model", req.model_key),))
             if req.compress and not quantized:
-                tr.emit("quantize", end, end, tier="compute",
-                        track=accel.name, parent=req.span_id)
+                tr.emit_fast("quantize", end, end, "compute",
+                             accel.name, parent=req.span_id)
             mx = self.sim.metrics
             mx.observe("stage_seconds", end - start, stage="compute")
         return PostResponse(
@@ -301,8 +358,9 @@ class HapiServer:
 
     def tenant_queue_depth(self, tenant: int) -> int:
         """Routing signal: this tenant's requests waiting on this replica
-        (tenant-spreading routers keep it low on every replica)."""
-        return sum(1 for r in self.queue if r.tenant == tenant)
+        (tenant-spreading routers keep it low on every replica). O(1):
+        the queue maintains per-tenant counters."""
+        return self.queue.tenant_depth(tenant)
 
 
 def _leaves(x):

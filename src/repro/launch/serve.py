@@ -124,7 +124,8 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
                     compress: bool = False,
                     compute_weights=None,
                     record: str = None,
-                    trace_out: str = None):
+                    trace_out: str = None,
+                    retention: str = "full"):
     """Drive a HAPI deployment through the :class:`repro.api.HapiCluster`
     facade with a multi-tenant burst workload and report served
     throughput per replica and per tenant. ``routing``/``placement``/
@@ -141,6 +142,7 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
     cluster = (HapiCluster(seed=seed)
                .with_servers(n_servers, n_accelerators=2,
                              flops_per_accel=65e12)
+               .with_retention(retention)
                .with_dataset("serve", content_seed=seed)
                .with_routing(ROUTING_POLICIES[routing]())
                .with_placement(PLACEMENT_POLICIES[placement]())
@@ -330,6 +332,12 @@ def main(argv=None):
                     choices=sorted(SCALING_POLICIES) + ["none"])
     ap.add_argument("--scheduler", default="wdrr",
                     choices=sorted(SCHEDULER_POLICIES))
+    ap.add_argument("--retention", default="full",
+                    choices=["full", "compact"],
+                    help="event-log retention: 'compact' keeps a bounded "
+                         "tail plus streaming digest and O(1) counters "
+                         "(the scale-out mode for large fleets); 'full' "
+                         "materializes every event (replay recording)")
     ap.add_argument("--record", default=None, metavar="PATH",
                     help="with --cos-fleet: write the run as a replayable "
                          "JSONL trace (repro.replay format)")
@@ -399,7 +407,8 @@ def main(argv=None):
                               scaling=args.scaling, scheduler=args.scheduler,
                               coalesce=args.coalesce, compress=args.compress,
                               compute_weights=cweights, record=args.record,
-                              trace_out=args.trace_out)
+                              trace_out=args.trace_out,
+                              retention=args.retention)
         print(f"served {out['served']} POSTs in {out['makespan']:.3f}s "
               f"({out['n_alive']} replicas alive)")
         if args.record:

@@ -14,7 +14,12 @@ grep for it): call through a local variable named ``mx`` —
 
 Label values are stringified and the per-key label-set cardinality is
 bounded (default 4096 sets): a labels explosion (e.g. labelling by
-request id) raises instead of silently eating memory.
+request id) raises instead of silently eating memory. At fleet scale a
+*structurally* bounded cross product (tenant x server) can legitimately
+exceed the bound, so ``overflow="rollup"`` folds excess label sets into
+one reserved ``{overflow="true"}`` series instead — per-key totals stay
+exact, only the long tail loses per-label attribution (the simulator's
+shared registry runs in this mode; see :class:`~repro.cos.clock.Simulator`).
 """
 from __future__ import annotations
 
@@ -25,8 +30,19 @@ from repro.obs.schema import validate_metric_key
 
 LabelSet = Tuple[Tuple[str, str], ...]
 
+#: Reserved label set absorbing past-the-bound series under
+#: ``overflow="rollup"``.
+OVERFLOW_LABELSET: LabelSet = (("overflow", "true"),)
+
 
 def _labelset(labels: Dict[str, object]) -> LabelSet:
+    # Hot path: most emission sites use 0-1 labels, where sorting is a
+    # no-op and the generator machinery dominates — unpack directly.
+    if not labels:
+        return ()
+    if len(labels) == 1:
+        [(k, v)] = labels.items()
+        return ((k, str(v)),)
     return tuple(sorted((k, str(v)) for k, v in labels.items()))
 
 
@@ -80,46 +96,59 @@ class MetricsRegistry:
     :data:`repro.obs.schema.METRIC_KEYS`; a key may only ever be used as
     one family (mixing raises, catching copy-paste instrumentation)."""
 
-    def __init__(self, max_label_sets: int = 4096) -> None:
+    def __init__(self, max_label_sets: int = 4096,
+                 overflow: str = "raise") -> None:
+        if overflow not in ("raise", "rollup"):
+            raise ValueError(f"overflow must be 'raise' or 'rollup', "
+                             f"got {overflow!r}")
         self.max_label_sets = max_label_sets
+        self.overflow = overflow
+        self.rolled_up = 0
         self._counters: Dict[str, Dict[LabelSet, float]] = {}
         self._gauges: Dict[str, Dict[LabelSet, float]] = {}
         self._hists: Dict[str, Dict[LabelSet, Histogram]] = {}
 
     # -- family bookkeeping ----------------------------------------------------
     def _family(self, key: str, fam: Dict[str, Dict]) -> Dict:
+        series = fam.get(key)
+        if series is not None:
+            # Key already admitted to this family: schema and cross-family
+            # checks ran at creation and key sets only grow, so skip both.
+            return series
         validate_metric_key(key)
         for other in (self._counters, self._gauges, self._hists):
             if other is not fam and key in other:
                 raise ValueError(
                     f"metric key {key!r} already used as a different "
                     f"instrument family")
-        return fam.setdefault(key, {})
+        series = fam[key] = {}
+        return series
 
-    def _bound(self, key: str, series: Dict, ls: LabelSet) -> None:
+    def _bound(self, key: str, series: Dict, ls: LabelSet) -> LabelSet:
         if ls not in series and len(series) >= self.max_label_sets:
+            if self.overflow == "rollup":
+                self.rolled_up += 1
+                return OVERFLOW_LABELSET
             raise ValueError(
                 f"metric {key!r} exceeded the label-cardinality bound "
                 f"({self.max_label_sets} label sets); a label is "
                 f"unbounded (request id? timestamp?)")
+        return ls
 
     # -- emission --------------------------------------------------------------
     def inc(self, key: str, value: float = 1.0, **labels) -> None:
         series = self._family(key, self._counters)
-        ls = _labelset(labels)
-        self._bound(key, series, ls)
+        ls = self._bound(key, series, _labelset(labels))
         series[ls] = series.get(ls, 0.0) + value
 
     def gauge_set(self, key: str, value: float, **labels) -> None:
         series = self._family(key, self._gauges)
-        ls = _labelset(labels)
-        self._bound(key, series, ls)
+        ls = self._bound(key, series, _labelset(labels))
         series[ls] = value
 
     def observe(self, key: str, value: float, **labels) -> None:
         series = self._family(key, self._hists)
-        ls = _labelset(labels)
-        self._bound(key, series, ls)
+        ls = self._bound(key, series, _labelset(labels))
         h = series.get(ls)
         if h is None:
             h = series[ls] = Histogram()

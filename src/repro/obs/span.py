@@ -69,10 +69,22 @@ class Tracer:
     ``enabled=False`` turns every call into a no-op returning -1, so
     instrumented code needs no branching beyond the cheap flag check it
     already performs — and a disabled run's event log is trivially
-    byte-identical to an enabled one's (nothing shares state)."""
+    byte-identical to an enabled one's (nothing shares state).
 
-    def __init__(self, enabled: bool = True) -> None:
+    ``max_spans`` (None = unbounded, the default) caps retention for
+    fleet-scale sweeps: once the window fills, the oldest spans are
+    dropped (counted in ``dropped``), span ids keep increasing, and
+    :meth:`extend` on an evicted span becomes a no-op — bounded memory
+    in exchange for a window-local trace. The unbounded default is
+    byte-identical to the historical behavior (``digest()`` included);
+    compact-retention simulators set the cap."""
+
+    def __init__(self, enabled: bool = True,
+                 max_spans: Optional[int] = None) -> None:
         self.enabled = enabled
+        self.max_spans = max_spans
+        self.dropped = 0
+        self._base = 0               # span_id of _spans[0]
         self._spans: List[Span] = []
         # Hot-loop buffer: raw (name, tier, track, t0, t1, parent, labels)
         # tuples from emit_fast, materialized (and validated) into Span
@@ -88,12 +100,25 @@ class Tracer:
     def _materialize(self) -> None:
         if self._raw:
             spans = self._spans
+            base = self._base
             for name, tier, track, t0, t1, parent, labels in self._raw:
                 validate_span_name(name)
                 validate_tier(tier)
-                spans.append(Span(len(spans), parent, name, tier, track,
-                                  t0, t1, labels))
+                spans.append(Span(base + len(spans), parent, name, tier,
+                                  track, t0, t1, labels))
             self._raw.clear()
+            self._trim()
+
+    def _trim(self) -> None:
+        # Evict in batches (only once the window overshoots 2x the cap,
+        # cutting back to the cap): a per-emit front-of-list delete would
+        # memmove the whole window on every span past the cap.
+        cap = self.max_spans
+        if cap is not None and len(self._spans) >= 2 * cap:
+            k = len(self._spans) - cap
+            del self._spans[:k]
+            self._base += k
+            self.dropped += k
 
     # -- emission --------------------------------------------------------------
     def emit(self, name: str, t0: float, t1: float, *, tier: str,
@@ -104,9 +129,10 @@ class Tracer:
         validate_span_name(name)
         validate_tier(tier)
         self._materialize()
-        sid = len(self._spans)
+        sid = self._base + len(self._spans)
         self._spans.append(Span(sid, parent, name, tier, track, t0, t1,
                                 tuple(labels)))
+        self._trim()
         return sid
 
     def emit_fast(self, name: str, t0: float, t1: float, tier: str,
@@ -117,7 +143,27 @@ class Tracer:
         deferring Span construction and schema validation to the first
         query. No span id is returned — fast spans cannot parent."""
         if self.enabled:
-            self._raw.append((name, tier, track, t0, t1, parent, labels))
+            raw = self._raw
+            raw.append((name, tier, track, t0, t1, parent, labels))
+            cap = self.max_spans
+            if cap is not None:
+                spans = self._spans
+                k = len(spans) + len(raw) - 2 * cap
+                if k >= 0:
+                    # Trim without materializing: ids are sequential, so
+                    # every _spans entry precedes every raw tuple — evict
+                    # oldest-first straight off the buffers (k + cap
+                    # total retained, same batch-at-2x-cap policy as
+                    # _trim) and never construct a Span that the window
+                    # would immediately drop.
+                    k += cap
+                    ks = min(k, len(spans))
+                    if ks:
+                        del spans[:ks]
+                    if k > ks:
+                        del raw[:k - ks]
+                    self._base += k
+                    self.dropped += k
 
     def begin(self, name: str, t0: float, *, tier: str, track: str,
               parent: int = -1, labels: Labels = ()) -> int:
@@ -127,9 +173,17 @@ class Tracer:
 
     def extend(self, span_id: int, t1: float) -> None:
         """Grow a span's end time (monotonic: ``max`` of old and new, so
-        late observers — wire pulls after fleet accounting — compose)."""
+        late observers — wire pulls after fleet accounting — compose).
+        A no-op for spans already evicted from a bounded window."""
         if span_id >= 0 and self.enabled:
-            s = self.spans[span_id]
+            idx = span_id - self._base
+            if idx < 0:
+                return
+            # Ids are only handed out by emit/begin, which materialize at
+            # call time — so the target is always already in _spans and a
+            # pending raw buffer can be left untouched (no flush on the
+            # per-request extend path).
+            s = self._spans[idx]
             if t1 > s.t1:
                 s.t1 = t1
 
@@ -139,7 +193,13 @@ class Tracer:
 
     # -- queries ---------------------------------------------------------------
     def __len__(self) -> int:
+        """Retained spans (the queryable window)."""
         return len(self._spans) + len(self._raw)
+
+    @property
+    def total(self) -> int:
+        """Spans ever emitted, including any a bounded window dropped."""
+        return self.dropped + len(self)
 
     def by_name(self, name: str) -> List[Span]:
         return [s for s in self.spans if s.name == name]
@@ -169,8 +229,12 @@ class Tracer:
 
     def digest(self) -> str:
         """sha256 over every span tuple — the determinism fingerprint
-        (same seed => identical digest, asserted by tests/test_obs.py)."""
+        (same seed => identical digest, asserted by tests/test_obs.py).
+        A bounded window hashes its retained spans plus the drop count
+        (still deterministic per seed, not comparable to unbounded)."""
         h = hashlib.sha256()
+        if self.dropped:
+            h.update(f"dropped:{self.dropped};".encode())
         for s in self.spans:
             h.update(repr(s.as_tuple()).encode())
         return h.hexdigest()

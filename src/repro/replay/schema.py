@@ -31,7 +31,7 @@ EVENT_KINDS = frozenset({
     # resource timelines (clock.py)
     "busy",
     # request lifecycle (fleet/server)
-    "post", "route", "served", "reject", "reissue", "rebalance",
+    "post", "route", "served", "reject", "reissue", "rebalance", "deliver",
     # client training loop
     "iteration", "resplit",
     # elasticity + autoscaling
