@@ -2,9 +2,9 @@
 PY := PYTHONPATH=src python
 
 .PHONY: ci check tier1 fleet network sched collect fast bench-fleet \
-        bench-network bench-qos bench-replay bench-sim bench-all \
-        fleet-smoke qos-smoke quantized-smoke replay-smoke obs-smoke \
-        scale-smoke
+        bench-network bench-qos bench-replay bench-sim bench-cache \
+        bench-all fleet-smoke qos-smoke quantized-smoke replay-smoke \
+        obs-smoke scale-smoke cache-smoke
 
 # collect + the fast check tier first (fail fast on the most-churned
 # layers), then the full tier-1 run.
@@ -16,7 +16,7 @@ ci: collect check tier1
 # and observability smokes with determinism checks (no BENCH_*.json
 # written).
 check: sched network fast fleet-smoke qos-smoke quantized-smoke \
-       replay-smoke obs-smoke scale-smoke
+       replay-smoke obs-smoke scale-smoke cache-smoke
 
 # Fail fast on collection regressions (e.g. a hard import of an
 # uninstalled dependency aborting whole test modules).
@@ -114,6 +114,21 @@ obs-smoke:
 # the authoritative int8 ratio (~0.516x => >=1.8x reduction, no JSON).
 quantized-smoke:
 	$(PY) benchmarks/network_contention.py --smoke
+
+# Warm-weight cache sweep: Zipf multi-model catalog across keep-warm
+# windows and fleet sizes; exits non-zero unless at >=4 replicas the
+# best window collapses reload bytes to <=0.5x the coalescing-only
+# baseline at <=1.05x makespan, no-worse p99 queue delay, a higher
+# warm-hit ratio, and warm bytes never overrun HBM. Writes
+# BENCH_cache.json.
+bench-cache:
+	$(PY) benchmarks/weight_cache.py --check-determinism
+
+# Warm-weight cache smoke used by `make check`: one small 4-replica
+# Zipf cell with a warm-hit-ratio floor and the no-HBM-overrun assert
+# (no JSON).
+cache-smoke:
+	$(PY) benchmarks/weight_cache.py --smoke --check-determinism
 
 # Refresh every BENCH_*.json from one entrypoint (benchmarks/run.py
 # --bench registry).

@@ -24,6 +24,12 @@ Two sweeps through the :class:`repro.api.HapiCluster` facade:
   microseconds of reload savings) fails loudly here. The on-run must
   stay deterministic under replay.
 
+* **coalescing, catalog scale** — the same off-vs-on assertion under a
+  seeded heavy-tailed (Zipf) burst over the multi-model catalog built
+  from ``src/repro/configs/`` (shared helpers from
+  :mod:`benchmarks.weight_cache`), so the reload win is demonstrated
+  under multi-model contention, not just the 1-model toy.
+
 ``--smoke`` is the `make check` gate: the 2:1 pair and a tiny coalescing
 sweep only, no JSON written.
 """
@@ -31,7 +37,14 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 from typing import Dict, List
+
+# Script-mode friendliness (`python benchmarks/qos_compute.py`): the
+# repo root must be importable for the shared catalog helpers in
+# benchmarks.weight_cache.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from repro.api import HapiCluster
 from repro.cos.scheduler import windowed_accel_share
@@ -114,6 +127,62 @@ def run_coalesce(*, seed: int = 0, n_samples: int = 4000,
     }
 
 
+def run_coalesce_catalog(*, seed: int = 0, n_requests: int = 120,
+                         span: float = 2.0, n_servers: int = 3) -> Dict:
+    """The coalescing sweep at catalog scale: one seeded Zipf burst over
+    the multi-model catalog built from ``src/repro/configs/`` (shared
+    helpers from :mod:`benchmarks.weight_cache`; popularity from
+    ``repro.replay.workload.zipf_popularity``), replayed with
+    cross-server coalescing off vs on. Same reload-bytes assertion as
+    the 1-model sweep — strictly fewer bytes, identical work, makespan
+    within 5% — now under heavy-tailed multi-model contention."""
+    from benchmarks.weight_cache import build_catalog, submit_zipf_stream
+
+    def run(coalescing):
+        c = (HapiCluster(seed=seed)
+             .with_servers(n_servers, n_accelerators=1)
+             .with_dataset("cat", n_samples=2000, object_size=50,
+                           n_classes=100)
+             .with_scheduler(coalescing=coalescing))
+        catalog, dropped = build_catalog(c)
+        responses = submit_zipf_stream(
+            c, catalog, seed=seed, n_requests=n_requests, span=span,
+            drain_every=n_requests)   # whole burst: deep queues overlap
+        mx = c.metrics()
+        return {
+            "served": len(responses),
+            "makespan": c.fleet.makespan(),
+            "work": sorted((r.tenant, r.object_name) for r in responses),
+            "reload_bytes": mx.total("reload_bytes_total"),
+            "reload_saved_bytes": mx.total("reload_saved_bytes_total"),
+            "coalesced_moves": int(mx.total("coalesce_total")),
+            "catalog": [m for m, _ in catalog],
+            "dropped": dropped,
+            "event_log": c.event_digest(),
+        }
+
+    off, on = run(False), run(True)
+    return {
+        "n_servers": n_servers,
+        "n_requests": n_requests,
+        "catalog": on["catalog"],
+        "dropped_models": on["dropped"],
+        "reload_bytes_off": off["reload_bytes"],
+        "reload_bytes_on": on["reload_bytes"],
+        "reload_saved_bytes": on["reload_saved_bytes"],
+        "coalesced_moves": on["coalesced_moves"],
+        "served": on["served"],
+        "makespan_off": off["makespan"],
+        "makespan_on": on["makespan"],
+        "same_work": off["work"] == on["work"],
+        "ok": (on["reload_bytes"] < off["reload_bytes"]
+               and on["reload_saved_bytes"] > 0
+               and off["work"] == on["work"]
+               and on["makespan"] <= off["makespan"] * 1.05),
+        "event_log_on": on["event_log"],
+    }
+
+
 def share_sweep(*, seed: int, pairs=WEIGHT_PAIRS, **kw) -> List[Dict]:
     rows = []
     for pair in pairs:
@@ -127,8 +196,9 @@ def share_sweep(*, seed: int, pairs=WEIGHT_PAIRS, **kw) -> List[Dict]:
     return rows
 
 
-def write_json(path: str, shares: List[Dict], coalesce: Dict, *, seed: int,
-               shares_ok: bool, coalesce_ok: bool, determinism) -> None:
+def write_json(path: str, shares: List[Dict], coalesce: Dict,
+               catalog: Dict, *, seed: int, shares_ok: bool,
+               coalesce_ok: bool, catalog_ok: bool, determinism) -> None:
     """BENCH_qos.json: the compute-tier QoS trajectory record."""
     payload = {
         "benchmark": "qos_compute",
@@ -136,6 +206,7 @@ def write_json(path: str, shares: List[Dict], coalesce: Dict, *, seed: int,
         "seed": seed,
         "shares_ok": shares_ok,        # accel time tracks weights <=10%
         "coalesce_ok": coalesce_ok,    # strictly fewer reload bytes
+        "coalesce_catalog_ok": catalog_ok,  # same, at Zipf catalog scale
         "determinism": determinism,
         "shares": [
             {k: v for k, v in r.items() if k != "event_log"}
@@ -143,6 +214,8 @@ def write_json(path: str, shares: List[Dict], coalesce: Dict, *, seed: int,
         ],
         "coalesce": {k: v for k, v in coalesce.items()
                      if k != "event_log_on"},
+        "coalesce_catalog": {k: v for k, v in catalog.items()
+                             if k != "event_log_on"},
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -165,9 +238,11 @@ def main(argv=None) -> int:
         shares = share_sweep(seed=args.seed, pairs=[(2.0, 1.0)],
                              n_samples=1500, object_size=125)
         coalesce = run_coalesce(seed=args.seed, n_samples=1500)
+        catalog = run_coalesce_catalog(seed=args.seed, n_requests=60)
     else:
         shares = share_sweep(seed=args.seed)
         coalesce = run_coalesce(seed=args.seed)
+        catalog = run_coalesce_catalog(seed=args.seed)
 
     shares_ok = all(r["ok"] for r in shares)
     print(f"accelerator-time shares track compute weights within 10%: "
@@ -179,6 +254,16 @@ def main(argv=None) -> int:
           f"{coalesce['coalesced_moves']} moves)  makespan "
           f"{coalesce['makespan_off']:.4f}s -> {coalesce['makespan_on']:.4f}s"
           f"  ok={coalesce['ok']}")
+    print(f"coalescing Zipf catalog ({len(catalog['catalog'])} models, "
+          f"{catalog['n_servers']} replicas): reload "
+          f"{catalog['reload_bytes_off'] / 1e9:.2f} GB -> "
+          f"{catalog['reload_bytes_on'] / 1e9:.2f} GB "
+          f"({catalog['coalesced_moves']} moves)  makespan "
+          f"{catalog['makespan_off']:.2f}s -> {catalog['makespan_on']:.2f}s"
+          f"  ok={catalog['ok']}")
+    if catalog["dropped_models"]:
+        print(f"  catalog dropped (exceed HBM residency budget): "
+              f"{catalog['dropped_models']}")
 
     same = None
     if args.check_determinism:
@@ -190,15 +275,19 @@ def main(argv=None) -> int:
         again_coal = run_coalesce(seed=args.seed,
                                   **({"n_samples": 1500}
                                      if args.smoke else {}))
+        again_cat = run_coalesce_catalog(
+            seed=args.seed, **({"n_requests": 60} if args.smoke else {}))
         same = (again_share["event_log"] == shares[-1]["event_log"]
-                and again_coal["event_log_on"] == coalesce["event_log_on"])
+                and again_coal["event_log_on"] == coalesce["event_log_on"]
+                and again_cat["event_log_on"] == catalog["event_log_on"])
         print(f"determinism (seed {args.seed}): {same}")
 
     if args.out and not args.smoke:
-        write_json(args.out, shares, coalesce, seed=args.seed,
+        write_json(args.out, shares, coalesce, catalog, seed=args.seed,
                    shares_ok=shares_ok, coalesce_ok=coalesce["ok"],
-                   determinism=same)
-    ok = shares_ok and coalesce["ok"] and same is not False
+                   catalog_ok=catalog["ok"], determinism=same)
+    ok = (shares_ok and coalesce["ok"] and catalog["ok"]
+          and same is not False)
     return 0 if ok else 1
 
 

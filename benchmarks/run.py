@@ -31,6 +31,11 @@ def _bench_replay(check):
     return main(["--check-determinism"] if check else [])
 
 
+def _bench_cache(check):
+    from benchmarks.weight_cache import main
+    return main(["--check-determinism"] if check else [])
+
+
 def _bench_sim(check):
     # sim_profile has no determinism flag (it is a pure timing/memory
     # profile; the obs determinism lives in its --smoke gate and tests)
@@ -46,6 +51,7 @@ ALL_BENCH = {
     "qos": _bench_qos,           # BENCH_qos.json
     "replay": _bench_replay,     # BENCH_replay.json
     "sim": _bench_sim,           # BENCH_sim.json
+    "cache": _bench_cache,       # BENCH_cache.json
 }
 
 
@@ -69,7 +75,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     ap.add_argument("--bench", default=None,
-                    metavar="all|fleet,network,qos,replay,sim",
+                    metavar="all|fleet,network,qos,replay,sim,cache",
                     help="refresh the BENCH_*.json suites instead of the "
                          "paper-figure CSV benches")
     ap.add_argument("--no-determinism", action="store_true",

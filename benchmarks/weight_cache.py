@@ -1,0 +1,323 @@
+"""Warm-weight cache benchmark: catalog-scale reload collapse
+(BENCH_cache.json).
+
+    PYTHONPATH=src python benchmarks/weight_cache.py [--seed 0]
+        [--check-determinism] [--smoke] [--out BENCH_cache.json]
+
+PR 5's coalescing sweep proved the warm-lease idea on a 1-model toy
+(158MB -> 20MB reload bytes). This benchmark is the catalog-scale
+version that the fleet-wide :class:`~repro.cos.weightcache.WeightCache`
+exists for: a heavy-tailed (Zipf) open-loop request stream over the
+multi-model catalog built from ``src/repro/configs/`` — every
+architecture whose shallowest prefix fits the per-model HBM residency
+budget (the ones that don't are reported, not silently dropped) — swept
+across keep-warm windows and fleet sizes.
+
+Per fleet size the baseline cell is warm-oblivious
+``ReplicaAwareRouting`` + cross-server coalescing (the strongest
+pre-cache configuration); cache cells add
+``with_weight_cache(window=...)`` + ``WarmAwareRouting`` (coalescer
+kept as fallback). The win that must show, at >= 4 replicas:
+
+* reload bytes <= 0.5x the coalescing-only baseline,
+* makespan <= 1.05x and p99 queue delay no worse,
+* a strictly higher warm-hit ratio than the warm-oblivious baseline,
+* resident warm bytes never exceed any accelerator's HBM capacity
+  (the cache charges every byte against the owning accelerator).
+
+``--smoke`` is the `make cache-smoke` gate: one small 4-replica cell,
+asserting a warm-hit-ratio floor and no HBM overrun, no JSON written.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# Script-mode friendliness (`python benchmarks/weight_cache.py`): the
+# repo root must be importable so qos_compute can share these helpers.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.api import HapiCluster, WarmAwareRouting
+from repro.config import HW
+from repro.replay.workload import zipf_popularity
+
+#: Per-model HBM residency budget: the deepest split must fit this
+#: fraction of one accelerator's HBM (prefix + a b_min batch's
+#: activations), so several catalog models can be warm at once.
+BUDGET_FRAC = 0.30
+#: Per-sample FLOPs ceiling at the chosen split, keeping catalog service
+#: times sub-second so the sweep measures reload dynamics, not compute.
+FLOPS_CAP = 1.0e12
+B_MIN = 25                     # the server default (paper §5.5)
+
+
+def pick_split(prof, budget: float,
+               flops_cap: float = FLOPS_CAP) -> Optional[int]:
+    """Deepest boundary (<= freeze index) whose prefix plus a minimum
+    batch's activations fit ``budget`` and whose per-sample FLOPs stay
+    under ``flops_cap``; None when not even the first boundary fits."""
+    best = None
+    for s in range(1, prof.freeze_index + 1):
+        need = prof.prefix_param_bytes[s] + \
+            B_MIN * prof.act_peak_bytes[s] * (1.0 + prof.headroom)
+        if need <= budget and prof.cum_flops[s] <= flops_cap:
+            best = s
+    return best
+
+
+def build_catalog(cluster: HapiCluster,
+                  budget: float = BUDGET_FRAC * HW.hbm_capacity,
+                  ) -> Tuple[List[Tuple[str, int]], List[str]]:
+    """The benchmark catalog: every ``repro.configs`` architecture that
+    fits the residency budget, with its chosen split. Returns
+    ``(catalog, dropped)`` — dropped models are reported by the caller
+    (no silent truncation of "catalog scale")."""
+    from repro.configs import ARCH_IDS
+
+    catalog: List[Tuple[str, int]] = []
+    dropped: List[str] = []
+    for arch in ARCH_IDS:
+        prof = cluster.profile(arch)
+        split = pick_split(prof, budget)
+        if split is None:
+            dropped.append(arch)
+        else:
+            catalog.append((arch, split))
+    return catalog, dropped
+
+
+def submit_zipf_stream(cluster: HapiCluster,
+                       catalog: List[Tuple[str, int]], *,
+                       seed: int, n_requests: int, span: float,
+                       dataset: str = "cat", n_tenants: int = 4,
+                       zipf_exponent: float = 1.1,
+                       train_batch: int = 96,
+                       drain_every: int = 1) -> List:
+    """One seeded open-loop day over the catalog: model popularity is
+    Zipf (``repro.replay.workload.zipf_popularity`` — the same sampler
+    the trace generator uses), arrivals are sorted-uniform over
+    ``span`` virtual seconds, objects and tenants cycle. Each request
+    is dispatched *at its arrival* (submit + incremental drain), the
+    way an open-loop client drives the fleet — accelerator busy-until
+    timelines persist across drains, so overlapping service still
+    queues. ``drain_every`` batches the dispatch instead (every k-th
+    request; ``n_requests`` gives classic whole-burst semantics with
+    deep overlapping queues — what the coalescing sweep wants). Driven
+    by its own RNG so the simulator's seed stream is untouched.
+    Returns the responses."""
+    cluster.build()
+    rng = np.random.default_rng(seed)
+    pop = zipf_popularity(rng, len(catalog), zipf_exponent)
+    objs = cluster.store.object_names(dataset)
+    arrivals = np.sort(rng.uniform(0.0, span, size=n_requests))
+    midx = rng.choice(len(catalog), size=n_requests, p=pop)
+    oidx = rng.integers(0, len(objs), size=n_requests)
+    responses = []
+    for i in range(n_requests):
+        model, split = catalog[int(midx[i])]
+        cluster.submit_request(
+            objs[int(oidx[i])], model, tenant=int(i % n_tenants),
+            arrival=float(arrivals[i]), split=split,
+            train_batch=train_batch)
+        if (i + 1) % drain_every == 0:
+            responses.extend(cluster.drain())
+    responses.extend(cluster.drain())
+    return responses
+
+
+def run_cell(*, seed: int, n_servers: int, window: Optional[float],
+             n_requests: int, span: float, n_samples: int = 2000,
+             object_size: int = 50, evict: str = "lru") -> Dict:
+    """One sweep cell. ``window=None`` is the coalescing-only baseline
+    (warm-oblivious replica-aware routing, no cache); a float enables
+    the weight cache with warm-aware routing, coalescer as fallback."""
+    c = (HapiCluster(seed=seed)
+         .with_servers(n_servers, n_accelerators=1)
+         .with_dataset("cat", n_samples=n_samples, object_size=object_size,
+                       n_classes=100)
+         .with_scheduler(coalescing=True))
+    if window is not None:
+        c = (c.with_weight_cache(window=window, policy=evict)
+             .with_routing(WarmAwareRouting()))
+    catalog, dropped = build_catalog(c)
+    responses = submit_zipf_stream(c, catalog, seed=seed,
+                                   n_requests=n_requests, span=span)
+    assert len(responses) == n_requests, \
+        f"lost work: served {len(responses)}/{n_requests}"
+    mx = c.metrics()
+    delays = sorted(r.queue_delay for r in responses)
+    p99 = float(np.percentile(delays, 99))
+    cell = {
+        "n_servers": n_servers,
+        "window": window,
+        "routing": "warm" if window is not None else "replica-aware",
+        "served": len(responses),
+        "reload_bytes": mx.total("reload_bytes_total"),
+        "reload_saved_bytes": mx.total("reload_saved_bytes_total"),
+        "warm_hits": int(mx.total("warm_hit_total")),
+        "warm_hit_ratio": mx.total("warm_hit_total") / len(responses),
+        "coalesced_moves": int(mx.total("coalesce_total")),
+        "makespan": c.fleet.makespan(),
+        "p99_queue_delay": p99,
+        "catalog": [m for m, _ in catalog],
+        "dropped": dropped,
+        "event_log": c.event_digest(),
+    }
+    if window is not None:
+        wc = c.weight_cache
+        hbm = max(a.hbm for s in c.fleet.servers for a in s.accels)
+        peak = max(wc.peak_resident.values(), default=0.0)
+        cell.update({
+            "evictions": wc.evicted,
+            "evicted_bytes": wc.evicted_bytes,
+            "retained_bytes": wc.retained_bytes,
+            "peak_resident_bytes": peak,
+            "resident_ok": peak <= hbm,
+        })
+        assert cell["resident_ok"], \
+            f"warm bytes overran HBM: {peak:.3e} > {hbm:.3e}"
+    return cell
+
+
+def sweep(*, seed: int, fleet_sizes=(2, 4, 6), windows=(10.0, 20.0, 40.0),
+          n_requests: int = 240, span: float = 300.0) -> List[Dict]:
+    rows = []
+    for n in fleet_sizes:
+        for w in (None,) + tuple(windows):
+            cell = run_cell(seed=seed, n_servers=n, window=w,
+                            n_requests=n_requests, span=span)
+            rows.append(cell)
+            tag = "baseline " if w is None else f"window={w:4.1f}"
+            print(f"servers={n}  {tag}  reload={cell['reload_bytes']/1e9:6.2f}GB"
+                  f"  warm-hit={cell['warm_hit_ratio']:.2f}"
+                  f"  makespan={cell['makespan']:6.2f}s"
+                  f"  p99={cell['p99_queue_delay']:.3f}s"
+                  + (f"  evict={cell['evictions']}" if w is not None else ""))
+    return rows
+
+
+def judge(rows: List[Dict], *, min_servers: int = 4) -> Dict:
+    """The acceptance gate: at every fleet size >= ``min_servers`` the
+    *best-window* cache cell must collapse reload bytes to <= 0.5x the
+    coalescing-only baseline at <= 1.05x makespan, no-worse p99 and a
+    strictly higher warm-hit ratio."""
+    verdicts = []
+    for n in sorted({r["n_servers"] for r in rows}):
+        if n < min_servers:
+            continue
+        base = next(r for r in rows
+                    if r["n_servers"] == n and r["window"] is None)
+        cached = [r for r in rows
+                  if r["n_servers"] == n and r["window"] is not None]
+        best = min(cached, key=lambda r: r["reload_bytes"])
+        v = {
+            "n_servers": n,
+            "window": best["window"],
+            "reload_ratio": best["reload_bytes"] / base["reload_bytes"],
+            "makespan_ratio": best["makespan"] / base["makespan"],
+            "p99_base": base["p99_queue_delay"],
+            "p99_cache": best["p99_queue_delay"],
+            "warm_hit_ratio_base": base["warm_hit_ratio"],
+            "warm_hit_ratio_cache": best["warm_hit_ratio"],
+        }
+        v["ok"] = (v["reload_ratio"] <= 0.5
+                   and v["makespan_ratio"] <= 1.05
+                   and v["p99_cache"] <= v["p99_base"] + 1e-9
+                   and v["warm_hit_ratio_cache"] > v["warm_hit_ratio_base"])
+        verdicts.append(v)
+    return {"verdicts": verdicts, "ok": all(v["ok"] for v in verdicts)}
+
+
+def run_smoke(*, seed: int, hit_floor: float = 0.25) -> bool:
+    """`make cache-smoke`: one small 4-replica Zipf cell; asserts the
+    warm-hit-ratio floor, a reload-bytes win over the coalescing-only
+    baseline, and no HBM overrun (resident_ok is asserted inside
+    run_cell on every cache cell)."""
+    base = run_cell(seed=seed, n_servers=4, window=None,
+                    n_requests=120, span=150.0)
+    cell = run_cell(seed=seed, n_servers=4, window=20.0,
+                    n_requests=120, span=150.0)
+    ok = (cell["warm_hit_ratio"] >= hit_floor
+          and cell["reload_bytes"] < base["reload_bytes"]
+          and cell["resident_ok"])
+    print(f"cache-smoke: warm-hit={cell['warm_hit_ratio']:.2f} "
+          f"(floor {hit_floor}), reload "
+          f"{base['reload_bytes']/1e9:.2f}GB -> "
+          f"{cell['reload_bytes']/1e9:.2f}GB, "
+          f"peak-resident={cell['peak_resident_bytes']/1e9:.2f}GB "
+          f"<= HBM: {cell['resident_ok']}  ok={ok}")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check-determinism", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small 4-replica cell for `make cache-smoke` "
+                         "(no JSON output)")
+    ap.add_argument("--out", default="BENCH_cache.json",
+                    help="machine-readable results path ('' disables)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        ok = run_smoke(seed=args.seed)
+        if args.check_determinism:
+            a = run_cell(seed=args.seed, n_servers=4, window=20.0,
+                         n_requests=120, span=150.0)
+            b = run_cell(seed=args.seed, n_servers=4, window=20.0,
+                         n_requests=120, span=150.0)
+            same = a["event_log"] == b["event_log"]
+            print(f"determinism (seed {args.seed}): {same}")
+            ok = ok and same
+        return 0 if ok else 1
+
+    rows = sweep(seed=args.seed)
+    if rows[0]["dropped"]:
+        print(f"catalog: {len(rows[0]['catalog'])} models; dropped "
+              f"(prefix exceeds {BUDGET_FRAC:.0%} HBM residency budget "
+              f"or FLOPs cap): {rows[0]['dropped']}")
+    verdict = judge(rows)
+    for v in verdict["verdicts"]:
+        print(f"servers={v['n_servers']}: reload x{v['reload_ratio']:.2f} "
+              f"makespan x{v['makespan_ratio']:.3f} "
+              f"p99 {v['p99_base']:.3f}->{v['p99_cache']:.3f} "
+              f"warm-hit {v['warm_hit_ratio_base']:.2f}->"
+              f"{v['warm_hit_ratio_cache']:.2f}  ok={v['ok']}")
+
+    same = None
+    if args.check_determinism:
+        probe = next(r for r in rows
+                     if r["n_servers"] == 4 and r["window"] is not None)
+        again = run_cell(seed=args.seed, n_servers=4,
+                         window=probe["window"], n_requests=240, span=300.0)
+        same = again["event_log"] == probe["event_log"]
+        print(f"determinism (seed {args.seed}): {same}")
+
+    if args.out:
+        payload = {
+            "benchmark": "weight_cache",
+            "seed": args.seed,
+            "catalog": rows[0]["catalog"],
+            "dropped_models": rows[0]["dropped"],
+            "cells": [{k: v for k, v in r.items()
+                       if k not in ("event_log", "catalog", "dropped")}
+                      for r in rows],
+            "verdicts": verdict["verdicts"],
+            "ok": verdict["ok"],
+            "determinism": same,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    return 0 if (verdict["ok"] and same is not False) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,8 +38,11 @@ from repro.api.policies import (
     ScalingPolicy,
     SchedulerPolicy,
     SloScaling,
+    WarmAwareRouting,
     WdrrScheduling,
 )
+from repro.cos.weightcache import (EVICTION_POLICIES, DemandWeightedEviction,
+                                   LruEviction, WeightCache)
 from repro.cos.network import NetworkFabric, NetworkSpec
 from repro.obs import (MetricsRegistry, Tracer, chrome_trace,
                        validate_chrome_trace, write_trace)
@@ -48,7 +51,9 @@ _CLUSTER_EXPORTS = ("HapiCluster", "TenantSpec", "TenantHandle", "ClusterReport"
 
 __all__ = list(_CLUSTER_EXPORTS) + [
     "RoutingPolicy", "ReplicaAwareRouting", "LeastLoadedRouting",
-    "FabricAwareRouting", "HashRouting",
+    "FabricAwareRouting", "WarmAwareRouting", "HashRouting",
+    "WeightCache", "LruEviction", "DemandWeightedEviction",
+    "EVICTION_POLICIES",
     "PlacementPolicy", "RoundRobinPlacement", "DemandAwarePlacement",
     "LearnedPlacement",
     "ScalingPolicy", "QueueDepthScaling", "SloScaling", "FabricAwareScaling",

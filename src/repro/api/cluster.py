@@ -48,6 +48,7 @@ from repro.cos.network import (NetworkFabric, NetworkSpec, run_concurrently,
                                wan_link)
 from repro.cos.objectstore import ObjectStore, put_synthetic_dataset
 from repro.cos.server import PostRequest, PostResponse
+from repro.cos.weightcache import WeightCache
 
 
 @dataclass(frozen=True)
@@ -178,6 +179,7 @@ class HapiCluster:
         self._storage_kwargs: Dict[str, Any] = {}
         self._scheduler: Optional[SchedulerPolicy] = None
         self._coalescing = False
+        self._weight_cache: Optional[WeightCache] = None
         self._routing: Optional[RoutingPolicy] = None
         self._placement: Optional[PlacementPolicy] = None
         self._scaling: Optional[ScalingPolicy] = None
@@ -247,6 +249,21 @@ class HapiCluster:
             self._scheduler = policy
         if coalescing is not None:
             self._coalescing = coalescing
+        return self
+
+    def with_weight_cache(self, window: float = 2.0,
+                          policy="lru") -> "HapiCluster":
+        """Enable the fleet-wide warm-weight cache
+        (:class:`~repro.cos.weightcache.WeightCache`): model weights
+        stay resident on their accelerator for ``window`` virtual
+        seconds past the last warm use, charged against that HBM budget
+        (Eq. 4 admission plans around them) and evicted under pressure
+        in ``policy`` order (``"lru"`` / ``"demand"``, or an eviction
+        policy instance). Pair with ``with_routing(WarmAwareRouting())``
+        to route requests *to* the warm bytes. Off by default — the
+        cache-less event logs stay byte-identical."""
+        self._check_mutable("with_weight_cache")
+        self._weight_cache = WeightCache(window=window, policy=policy)
         return self
 
     def with_network(self, spec: Optional[NetworkSpec] = None,
@@ -373,6 +390,7 @@ class HapiCluster:
         self._fleet = HapiFleet(
             store, n_servers=self._n_servers, sim=sim,
             scheduler=self._scheduler, coalescing=self._coalescing,
+            weight_cache=self._weight_cache,
             autoscale=self._autoscale,
             routing=self._routing, placement=self._placement,
             scaling=self._scaling,
@@ -423,14 +441,30 @@ class HapiCluster:
 
     # -- model registry --------------------------------------------------------
     def profile(self, model_key: str, n_classes: int = 1000) -> LayerProfile:
-        """Cached per-layer profile of one of the paper's vision models."""
+        """Cached per-layer profile: one of the paper's vision models
+        (:data:`repro.models.vision.PAPER_MODELS`), or any architecture
+        from the config registry (:data:`repro.configs.ARCH_IDS`) via
+        the analytic LM profiler — that is what lets benchmarks build a
+        multi-model catalog from ``src/repro/configs/``."""
         key = (model_key, n_classes)
         if key not in self._profiles:
             from repro.models.vision import PAPER_MODELS
 
-            self._profiles[key] = profile_layered(
-                PAPER_MODELS[model_key](n_classes))
+            if model_key in PAPER_MODELS:
+                self._profiles[key] = profile_layered(
+                    PAPER_MODELS[model_key](n_classes))
+            else:
+                from repro.configs import get_config
+                from repro.core.profiler import profile_lm
+
+                self._profiles[key] = profile_lm(get_config(model_key),
+                                                 seq_len=512)
         return self._profiles[key]
+
+    @property
+    def weight_cache(self) -> Optional[WeightCache]:
+        """The fleet's warm-weight cache (None unless enabled)."""
+        return self._weight_cache
 
     def split_for(self, model_key: str, train_batch: int,
                   hapi: Optional[HapiConfig] = None,
@@ -539,6 +573,44 @@ class HapiCluster:
             self._fleet.submit(req)
             ids.append(req.req_id)
         return ids
+
+    def submit_request(self, object_name: str, model_key: str, *,
+                       tenant: int, arrival: float = 0.0,
+                       train_batch: int = 1000,
+                       hapi: Optional[HapiConfig] = None,
+                       split: Optional[int] = None,
+                       b_max: Optional[int] = None,
+                       adaptable: bool = True,
+                       n_classes: int = 1000,
+                       network_weight: float = 1.0,
+                       compute_weight: Optional[float] = None) -> int:
+        """Submit a single POST for one object at an explicit arrival
+        time — the open-loop entry point catalog-scale benchmarks drive
+        (each request carries its own model and arrival, unlike
+        :meth:`submit_burst`'s one-model one-jitter burst). Returns the
+        request id."""
+        self.build()
+        if compute_weight is None:
+            compute_weight = network_weight
+        if compute_weight <= 0:
+            raise ValueError(
+                f"compute weight must be > 0, got {compute_weight}")
+        hapi = hapi or HapiConfig()
+        prof = self.profile(model_key, n_classes)
+        if split is None:
+            split = choose_split(prof, hapi, train_batch).split_index
+        if b_max is None:
+            b_max = min(train_batch, hapi.cos_batch)
+        self._next_req += 1
+        req = PostRequest(
+            req_id=self._next_req, tenant=tenant, model_key=model_key,
+            split=split, object_name=object_name, b_max=b_max, profile=prof,
+            arrival=float(arrival), compress=hapi.compress_transfer,
+            adaptable=adaptable, network_weight=network_weight,
+            compute_weight=compute_weight,
+        )
+        self._fleet.submit(req)
+        return req.req_id
 
     def drain(self, now: float = 0.0) -> List[PostResponse]:
         """Serve everything pending/in-flight across the fleet."""

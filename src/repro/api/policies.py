@@ -125,6 +125,47 @@ class HashRouting:
 
 
 @dataclass
+class WarmAwareRouting(ReplicaAwareRouting):
+    """Warmth-first routing for the fleet-wide weight cache: send a
+    request to a replica *because* its model is already resident there —
+    active lease or cache entry (``ComputeScheduler.warm_replica``) —
+    instead of letting locality pick a cold replica and the coalescer
+    fix it up with an after-the-fact extra hop.
+
+    A warm replica is only taken when it isn't materially busier than
+    the best cold candidate: its queue may run at most ``depth_slack``
+    deeper than the shallowest alive queue, and an accelerator there
+    must be free no later than ``busy_slack`` seconds after the idlest
+    replica fleet-wide could start the request — otherwise chasing
+    warmth would trade reload bytes for queueing delay (the benchmark's
+    p99 guardrail). Among warm candidates the usual least-loaded order
+    decides; with no acceptable warm replica the policy degrades to
+    plain replica-aware routing, and the coalescer remains the fallback
+    for requests that went cold anyway (races with entries created
+    after routing)."""
+
+    name: str = "warm"
+    depth_slack: int = 2
+    busy_slack: float = 0.0
+
+    def route(self, fleet: "HapiFleet", req: "PostRequest",
+              alive: List["HapiServer"]) -> "HapiServer":
+        sched = fleet.scheduler
+        warm = [s for s in alive if sched.warm_replica(s, req)]
+        if warm:
+            floor = min(s.queue_depth() for s in alive)
+            free_at = min(min(a.busy_until for a in s.accels)
+                          for s in alive)
+            horizon = max(req.arrival, free_at) + self.busy_slack
+            ok = [s for s in warm
+                  if s.queue_depth() <= floor + self.depth_slack
+                  and min(a.busy_until for a in s.accels) <= horizon]
+            if ok:
+                return min(ok, key=lambda s: self._load(fleet, req, s))
+        return super().route(fleet, req, alive)
+
+
+@dataclass
 class FabricAwareRouting(ReplicaAwareRouting):
     """Replica-aware routing that also watches the storage network
     (ROADMAP: fold fabric state into routing): among the co-located
@@ -604,6 +645,7 @@ ROUTING_POLICIES = {
     "replica-aware": ReplicaAwareRouting,
     "least-loaded": LeastLoadedRouting,
     "fabric-aware": FabricAwareRouting,
+    "warm": WarmAwareRouting,
     "hash": HashRouting,
 }
 PLACEMENT_POLICIES = {
@@ -623,7 +665,7 @@ SCHEDULER_POLICIES = {
 
 __all__ = [
     "RoutingPolicy", "ReplicaAwareRouting", "LeastLoadedRouting",
-    "FabricAwareRouting", "HashRouting",
+    "FabricAwareRouting", "WarmAwareRouting", "HashRouting",
     "PlacementPolicy", "RoundRobinPlacement", "DemandAwarePlacement",
     "LearnedPlacement", "learned_features",
     "ScalingPolicy", "QueueDepthScaling", "SloScaling", "FabricAwareScaling",

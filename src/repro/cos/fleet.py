@@ -73,6 +73,7 @@ from repro.cos.scheduler import (
     WdrrScheduling,
 )
 from repro.cos.server import HapiServer, PostRequest, PostResponse
+from repro.cos.weightcache import WeightCache
 
 
 class _ServedRequest(NamedTuple):
@@ -149,6 +150,7 @@ class HapiFleet:
         scaling: Optional[ScalingPolicy] = None,
         scheduler: Optional[Union[SchedulerPolicy, ComputeScheduler]] = None,
         coalescing: Optional[bool] = None,
+        weight_cache: Optional[WeightCache] = None,
         return_path: bool = False,
         return_bandwidth: Optional[float] = None,
         **server_kwargs,
@@ -180,6 +182,10 @@ class HapiFleet:
         else:
             self.scheduler = ComputeScheduler(scheduler,
                                               coalescing=bool(coalescing))
+        # Fleet-wide warm-weight cache (None = off, the byte-identical
+        # default): shared by every replica via the shared scheduler.
+        if weight_cache is not None:
+            self.scheduler.cache = weight_cache
         # Placement precedence: explicit arg, then whatever the store was
         # built with, then the static default. The chosen policy is pushed
         # back onto the store so later put_dataset calls agree with it.

@@ -53,6 +53,7 @@ from typing import (TYPE_CHECKING, Deque, Dict, List, Optional, Protocol,
                     Tuple, runtime_checkable)
 
 from repro.core.batch_adapt import AdaptRequest
+from repro.cos.weightcache import WeightCache
 
 if TYPE_CHECKING:  # server/fleet import this module; never import them back
     from repro.cos.fleet import HapiFleet
@@ -200,10 +201,15 @@ class ComputeScheduler:
     """
 
     def __init__(self, policy: Optional[SchedulerPolicy] = None, *,
-                 coalescing: bool = False) -> None:
+                 coalescing: bool = False,
+                 cache: Optional[WeightCache] = None) -> None:
         self.policy: SchedulerPolicy = policy if policy is not None \
             else WdrrScheduling()
         self.coalescing = coalescing
+        # Fleet-wide warm-weight cache (None — the default — leaves every
+        # code path byte-identical to the cache-less scheduler; asserted
+        # against the golden digests).
+        self.cache = cache
         self.pending: Dict[int, Deque["PostRequest"]] = {}
         # Running size of all pending queues: at fleet scale the tenant
         # dict holds thousands of (mostly drained) deques, so the
@@ -278,12 +284,32 @@ class ComputeScheduler:
               accel_idx: Optional[int] = None) -> bool:
         """True if ``server`` holds an active lease covering the
         request's model prefix (same model, split at least as deep) —
-        i.e. the weights the request needs are already in HBM."""
+        i.e. the weights the request needs are already in HBM. O(leases
+        for this model) via the server's lease index, not O(all leases):
+        the coalescer calls this per queued request per drain round."""
         return any(
-            lease.model_key == req.model_key and lease.split >= req.split
+            lease.split >= req.split
             and (accel_idx is None or lease.accel == accel_idx)
-            for lease in server.leases
+            for lease in server.warm_leases(req.model_key)
         )
+
+    def _warm_accel(self, server: "HapiServer", req: "PostRequest",
+                    accel_idx: int) -> bool:
+        """Per-accelerator warmth: an active lease or a warm-weight
+        cache entry holds the model resident on that accelerator."""
+        if self._warm(server, req, accel_idx):
+            return True
+        return self.cache is not None and self.cache.covers(
+            server.server_id, accel_idx, req.model_key, req.split)
+
+    def warm_replica(self, server: "HapiServer",
+                     req: "PostRequest") -> bool:
+        """Routing/coalescing signal: is the request's model resident
+        anywhere on this replica — active lease or cache entry?"""
+        if self.cache is not None and self.cache.is_warm_server(
+                server.server_id, req.model_key, req.split):
+            return True
+        return self._warm(server, req)
 
     def coalesce(self, fleet: "HapiFleet") -> int:
         """One coalescing pass: ship queued requests whose model is cold
@@ -299,8 +325,13 @@ class ComputeScheduler:
         leave the receiver's queue deeper than the sender's. Warm-lease
         reload savings on a replica's *own* queue need no move at all —
         they come from the warm-accelerator assignment in
-        :meth:`server_round`. Returns #moved."""
-        if not self.coalescing:
+        :meth:`server_round`. Returns #moved.
+
+        With the warm-weight cache enabled the pass runs even when
+        ``coalescing`` is off and also recognizes cache residency as
+        warmth — the cache's stated fallback for requests the router
+        placed cold (races against entries created after routing)."""
+        if not self.coalescing and self.cache is None:
             return 0
         routable = fleet._routable()
         if len(routable) < 2:
@@ -312,10 +343,10 @@ class ComputeScheduler:
         moved = 0
         for src in sorted(routable, key=lambda s: s.server_id):
             for req in list(src.queue):
-                if self._warm(src, req):
+                if self.warm_replica(src, req):
                     continue
                 targets = [s for s in routable
-                           if s is not src and self._warm(s, req)
+                           if s is not src and self.warm_replica(s, req)
                            and s.queue_depth() + 1 <= src.queue_depth()
                            and avail(s) <= avail(src)]
                 if not targets:
@@ -352,6 +383,16 @@ class ComputeScheduler:
         t = max(now, min(r.arrival for r in server.queue)) + \
             server.wait_window
         server._free_expired(t)
+        if self.cache is not None:
+            # Expired leases above may have transferred model bytes into
+            # the cache; now drop entries idle past the keep-warm window
+            # and publish the replica's resident footprint.
+            self.cache.expire(server, t)
+            if server.sim is not None:
+                mx = server.sim.metrics
+                mx.gauge_set("cache_resident_bytes",
+                             self.cache.resident_bytes(server.server_id),
+                             server=server.server_id)
         arrived = [r for r in server.queue if r.arrival <= t]
         if not arrived:
             return [], min(r.arrival for r in server.queue)
@@ -365,9 +406,9 @@ class ComputeScheduler:
         # squander the warm lease the request was shipped here for.
         per_accel: Dict[int, List["PostRequest"]] = {}
         for r in arrived:
-            if self.coalescing:
+            if self.coalescing or self.cache is not None:
                 warm_ais = [i for i in range(len(server.accels))
-                            if self._warm(server, r, i)]
+                            if self._warm_accel(server, r, i)]
                 if warm_ais:
                     per_accel.setdefault(warm_ais[0], []).append(r)
                     continue
@@ -378,14 +419,41 @@ class ComputeScheduler:
         progressed = False
         planned = []            # (queue_position, req, batch, mem, accel)
         pos = {r.req_id: i for i, r in enumerate(arrived)}
+        covered_ids: set = set()   # requests admitted on a cache entry
         for ai, reqs in per_accel.items():
             accel = server.accels[ai]
+            # Warm-weight cache: a request whose model is cache-resident
+            # on this accelerator is admitted with mem_model = 0 — the
+            # bytes are already charged (once) by the entry, so Eq. 4
+            # sees hbm_free = capacity - activations - warm_weights and
+            # never double-counts the prefix.
+            covered = {
+                r.req_id for r in reqs
+                if self.cache is not None and self.cache.covers(
+                    server.server_id, ai, r.model_key, r.split)
+            }
+            covered_ids |= covered
+            if self.cache is not None:
+                # Release warm bytes under pressure *before* Eq. 4 would
+                # shrink batches: if the round's full demand exceeds the
+                # free budget, evict idle entries (never ones pinned by
+                # leases or needed by this round) until it fits.
+                want = sum(
+                    (0.0 if r.req_id in covered
+                     else r.profile.prefix_param_bytes[r.split])
+                    + r.b_max * server._mem_per_sample(r)
+                    for r in reqs)
+                free = accel.hbm - accel.mem_used
+                if want > free:
+                    self.cache.release(server, ai, want - free, t,
+                                       keep={r.model_key for r in reqs})
             budget = accel.hbm - accel.mem_used
             adapt_reqs = [
                 AdaptRequest(
                     req_id=r.req_id,
                     mem_per_sample=server._mem_per_sample(r),
-                    mem_model=r.profile.prefix_param_bytes[r.split],
+                    mem_model=0.0 if r.req_id in covered
+                    else r.profile.prefix_param_bytes[r.split],
                     b_max=r.b_max,
                     b_min_override=0 if r.adaptable else r.b_max,
                     weight=r.compute_weight,
@@ -421,31 +489,46 @@ class ComputeScheduler:
             parents=[p[1].span_id for p in ordered]) if len(ordered) > 1 \
             else None
         for i, (_, req, batch, mem, ai) in enumerate(ordered):
-            # Coalescing's warm-lease hit: the model prefix is already
-            # resident on this accelerator, so the stateless reload
-            # charge is skipped (HBM accounting stays conservative — the
-            # request's Eq. 4 share still includes the model bytes).
+            # Warm hit: the model prefix is already resident on this
+            # accelerator — via an active lease (coalescing) or a
+            # warm-weight cache entry — so the stateless reload charge
+            # is skipped. Cache hits were admitted with mem_model = 0
+            # (the entry holds the charge); lease hits keep the
+            # conservative double-charge the coalescer always had.
             nbytes = req.profile.prefix_param_bytes[req.split]
-            warm = self.coalescing and self._warm(server, req, ai)
+            cache_hit = req.req_id in covered_ids
+            warm = cache_hit or (
+                (self.coalescing or self.cache is not None)
+                and self._warm(server, req, ai))
             mx = server.sim.metrics if server.sim is not None else None
             if warm:
                 self.reload_saved_bytes += nbytes
+                if cache_hit:
+                    self.cache.touch(server.server_id, ai, req.model_key, t)
                 if server.sim is not None:
                     server.sim.record(t, "warm-hit",
                                       f"s{server.server_id} t{req.tenant} "
                                       f"{req.object_name}")
                 if mx is not None:
-                    mx.inc("warm_hit_total", tenant=req.tenant)
+                    mx.inc("warm_hit_total", tenant=req.tenant,
+                           model=req.model_key)
                     mx.inc("reload_saved_bytes_total", nbytes,
-                           server=server.server_id)
+                           server=server.server_id, model=req.model_key)
             else:
                 self.reload_bytes += nbytes
                 if mx is not None:
                     mx.inc("reload_bytes_total", nbytes,
-                           server=server.server_id)
+                           server=server.server_id, model=req.model_key)
             resp = server._execute(req, batch, mem, ai, t,
                                    pre_read=reads[i] if reads else None,
-                                   charge_load=not warm)
+                                   charge_load=not warm,
+                                   model_bytes=0.0 if cache_hit
+                                   or self.cache is None else nbytes)
+            if cache_hit:
+                # The lease rides the entry: pin it so pressure eviction
+                # cannot pull the weights out from under the admitted
+                # batch; expiry unpins (see WeightCache.on_lease_expired).
+                self.cache.pin(server.server_id, ai, req.model_key)
             responses.append(resp)
             server.queue.remove(req)
             progressed = True

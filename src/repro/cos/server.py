@@ -121,6 +121,11 @@ class _Lease(NamedTuple):
     # far cheaper than a dataclass __init__ on the serve hot path.)
     model_key: str = ""
     split: int = 0
+    # Model-prefix bytes inside `nbytes` that the warm-weight cache may
+    # retain when the lease expires (0.0: nothing to retain — either the
+    # cache is off, or the request rode an existing cache entry and only
+    # unpins it on expiry).
+    model_bytes: float = 0.0
 
 
 class HapiServer:
@@ -156,6 +161,14 @@ class HapiServer:
         self.mxu_efficiency = mxu_efficiency
         self.queue: TenantQueue = TenantQueue()
         self.leases: List[_Lease] = []
+        # Warm-lease index by model_key: `ComputeScheduler._warm` used to
+        # rescan every active lease per queued request per drain round —
+        # O(queue x leases) at fleet scale. The index is maintained on
+        # lease grant (`_execute`) and expiry (`_free_expired`); the
+        # length check in `warm_leases` catches out-of-band mutation
+        # (tests appending to `leases` directly) and rebuilds.
+        self.lease_index: Dict[str, List[_Lease]] = {}
+        self._lease_index_n = 0
         # Served responses a *different* caller drained on the owner's
         # behalf (shared-server bursts): clients stash strangers here and
         # claim their own, so no response is ever silently dropped. Lives
@@ -187,10 +200,16 @@ class HapiServer:
 
     # -- fault tolerance -------------------------------------------------------
     def kill(self) -> None:
-        """Crash: the queue is lost (clients re-issue), leases vanish."""
+        """Crash: the queue is lost (clients re-issue), leases vanish —
+        and so does every warm-weight cache entry on this replica's HBM."""
         self.alive = False
         self.queue.clear()
         self.leases.clear()
+        self.lease_index.clear()
+        self._lease_index_n = 0
+        cache = getattr(self.scheduler, "cache", None)
+        if cache is not None:
+            cache.drop_server(self)
         for a in self.accels:
             a.mem_used = 0.0
 
@@ -205,13 +224,40 @@ class HapiServer:
 
     # -- serving -------------------------------------------------------------------
     def _free_expired(self, t: float) -> None:
+        cache = getattr(self.scheduler, "cache", None)
         kept = []
+        expired = False
         for lease in self.leases:
             if lease.end <= t:
-                self.accels[lease.accel].free(lease.nbytes)
+                # Warm-weight cache: ownership of the model-prefix bytes
+                # can transfer from the lease to a cache entry — only the
+                # remainder (activations + non-retained model bytes) is
+                # freed. With the cache off, retained is 0 and this is
+                # the historical full free.
+                retained = cache.on_lease_expired(self, lease, t) \
+                    if cache is not None else 0.0
+                self.accels[lease.accel].free(lease.nbytes - retained)
+                expired = True
             else:
                 kept.append(lease)
         self.leases = kept
+        if expired:
+            self._rebuild_lease_index()
+
+    def _rebuild_lease_index(self) -> None:
+        idx: Dict[str, List[_Lease]] = {}
+        for lease in self.leases:
+            idx.setdefault(lease.model_key, []).append(lease)
+        self.lease_index = idx
+        self._lease_index_n = len(self.leases)
+
+    def warm_leases(self, model_key: str) -> List[_Lease]:
+        """Active leases holding ``model_key`` resident (possibly empty).
+        O(1) lookup on the scheduler hot path; the length check repairs
+        the index after out-of-band `leases` mutation."""
+        if self._lease_index_n != len(self.leases):
+            self._rebuild_lease_index()
+        return self.lease_index.get(model_key, [])
 
     def drain(self, now: float = 0.0) -> List[PostResponse]:
         """Serve everything currently queued; returns responses (virtual-
@@ -260,7 +306,8 @@ class HapiServer:
     def _execute(self, req: PostRequest, cos_batch: int, mem: float,
                  accel_idx: int, t: float,
                  pre_read: Optional[Tuple[Any, float]] = None,
-                 charge_load: bool = True) -> PostResponse:
+                 charge_load: bool = True,
+                 model_bytes: float = 0.0) -> PostResponse:
         accel = self.accels[accel_idx]
         obj, t_data = pre_read if pre_read is not None \
             else self.store.read(req.object_name, t, parent=req.span_id)
@@ -295,8 +342,12 @@ class HapiServer:
             f"batch adaptation overcommitted {accel.name}: "
             f"alloc {mem:.3e} B with {accel.mem_used:.3e}/{accel.hbm:.3e} used"
         )
-        self.leases.append(_Lease(end=end, nbytes=mem, accel=accel_idx,
-                                  model_key=req.model_key, split=req.split))
+        lease = _Lease(end=end, nbytes=mem, accel=accel_idx,
+                       model_key=req.model_key, split=req.split,
+                       model_bytes=model_bytes)
+        self.leases.append(lease)
+        self.lease_index.setdefault(req.model_key, []).append(lease)
+        self._lease_index_n += 1
 
         acts = None
         act_bytes = prof.out_bytes[req.split] * n

@@ -40,6 +40,15 @@ model loaded, cutting stateless reload bytes):
     PYTHONPATH=src python -m repro.launch.serve --cos-fleet 2 \\
         --tenants 2 --scheduler wdrr --tenant-compute-weight 4,1 --coalesce
 
+``--warm-window SECONDS`` turns on the fleet-wide warm-weight cache
+(expired leases keep their model bytes resident, HBM-charged, for the
+window; ``--warm-evict lru|demand`` picks the pressure-eviction order)
+and ``--routing warm`` routes requests to replicas that already hold
+their model:
+
+    PYTHONPATH=src python -m repro.launch.serve --cos-fleet 4 \\
+        --tenants 4 --coalesce --warm-window 5 --routing warm
+
 ``--compress`` turns on the quantized wire path: split-boundary
 activations ship int8 with per-tile scales, and Algorithm 1, the cost
 model and the servers all charge the one authoritative ratio
@@ -125,15 +134,20 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
                     compute_weights=None,
                     record: str = None,
                     trace_out: str = None,
-                    retention: str = "full"):
+                    retention: str = "full",
+                    warm_window: float = 0.0,
+                    warm_evict: str = "lru"):
     """Drive a HAPI deployment through the :class:`repro.api.HapiCluster`
     facade with a multi-tenant burst workload and report served
     throughput per replica and per tenant. ``routing``/``placement``/
     ``scaling``/``scheduler`` select fleet policies by registry name;
     ``compute_weights`` assigns accelerator service classes (cycled over
     tenants), ``coalesce`` turns on cross-server batch coalescing;
-    ``record`` writes the run as a replayable JSONL trace
-    (:mod:`repro.replay`) for offline policy search."""
+    ``warm_window`` > 0 enables the fleet-wide warm-weight cache
+    (keep-warm seconds; ``warm_evict`` picks the eviction policy, and
+    ``--routing warm`` routes on residency); ``record`` writes the run
+    as a replayable JSONL trace (:mod:`repro.replay`) for offline
+    policy search."""
     from repro.api import (HapiCluster, PLACEMENT_POLICIES, ROUTING_POLICIES,
                            SCALING_POLICIES, SCHEDULER_POLICIES)
     from repro.config import HapiConfig
@@ -148,6 +162,8 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
                .with_placement(PLACEMENT_POLICIES[placement]())
                .with_scheduler(SCHEDULER_POLICIES[scheduler](),
                                coalescing=coalesce))
+    if warm_window > 0:
+        cluster.with_weight_cache(window=warm_window, policy=warm_evict)
     if autoscale:
         cluster.with_scaling(SCALING_POLICIES[scaling](
             min_servers=1, max_servers=max_servers))
@@ -173,7 +189,7 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
     # tests/test_obs.py); the event-log string path stays for the
     # golden-digest tests only.
     mx = cluster.metrics()
-    return {
+    out = {
         "served": len(responses),
         "trace": record,
         "trace_out": trace_out,
@@ -187,6 +203,16 @@ def serve_cos_fleet(n_servers: int, *, n_tenants: int = 3, seed: int = 0,
         "queue_delay_p99": mx.percentile("queue_delay_seconds", 0.99),
         "slo_misses": int(mx.total("slo_miss_total")),
     }
+    if warm_window > 0:
+        wc = cluster.weight_cache
+        out.update({
+            "warm_hits": int(mx.total("warm_hit_total")),
+            "cache_evictions": wc.evicted,
+            "cache_evicted_bytes": wc.evicted_bytes,
+            "cache_retained_bytes": wc.retained_bytes,
+            "cache_resident_bytes": wc.resident_bytes(),
+        })
+    return out
 
 
 def replay_cos_trace(path: str, *, routing: str = "replica-aware",
@@ -316,6 +342,19 @@ def main(argv=None):
                     help="cross-server batch coalescing: ship queued "
                          "requests to replicas already holding their "
                          "model loaded (cuts stateless reload bytes)")
+    ap.add_argument("--warm-window", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="keep-warm window of the fleet-wide weight "
+                         "cache: expired leases transfer their model "
+                         "bytes into per-accelerator cache entries that "
+                         "stay HBM-charged for this long after the last "
+                         "hit (0 = cache off); pair with --routing warm "
+                         "for residency-aware dispatch")
+    ap.add_argument("--warm-evict", default="lru",
+                    choices=["lru", "demand"],
+                    help="warm-weight cache eviction order under HBM "
+                         "pressure: plain LRU or demand-weighted "
+                         "(decayed hit count, then recency)")
     ap.add_argument("--compress", action="store_true",
                     help="int8(+per-tile scales) boundary compression on "
                          "the activation wire: Algorithm 1, the cost "
@@ -408,17 +447,27 @@ def main(argv=None):
                               coalesce=args.coalesce, compress=args.compress,
                               compute_weights=cweights, record=args.record,
                               trace_out=args.trace_out,
-                              retention=args.retention)
+                              retention=args.retention,
+                              warm_window=args.warm_window,
+                              warm_evict=args.warm_evict)
         print(f"served {out['served']} POSTs in {out['makespan']:.3f}s "
               f"({out['n_alive']} replicas alive)")
         if args.record:
             print(f"trace recorded to {args.record}")
         if args.trace_out:
             print(f"timeline written to {args.trace_out}")
-        if args.coalesce:
+        if args.coalesce or args.warm_window > 0:
             print(f"stateless reloads: {out['reload_bytes'] / 1e9:.2f} GB "
                   f"charged, {out['reload_saved_bytes'] / 1e9:.2f} GB "
-                  f"saved by coalescing")
+                  f"saved by warm hits")
+        if args.warm_window > 0:
+            print(f"warm-weight cache (window={args.warm_window:g}s, "
+                  f"{args.warm_evict}): {out['warm_hits']} warm hits, "
+                  f"{out['cache_retained_bytes'] / 1e9:.2f} GB retained, "
+                  f"{out['cache_evictions']} evictions "
+                  f"({out['cache_evicted_bytes'] / 1e9:.2f} GB), "
+                  f"{out['cache_resident_bytes'] / 1e9:.2f} GB resident "
+                  f"at drain")
         print(f"per-server: {out['served_by_server']}")
         for t, thr in out["tenant_throughput"].items():
             print(f"tenant {t}: {thr:10.1f} samples/s")

@@ -48,6 +48,8 @@ METRIC_KEYS = frozenset({
     # compute-tier scheduler / coalescer
     "reload_bytes_total", "reload_saved_bytes_total", "warm_hit_total",
     "coalesce_total",
+    # warm-weight cache
+    "evict_total", "cache_resident_bytes",
     # elasticity
     "scale_events_total",
     # network fabric

@@ -37,8 +37,8 @@ EVENT_KINDS = frozenset({
     # elasticity + autoscaling
     "kill", "restart", "scale-up", "scale-down", "cordon", "scale-hold",
     "accel-util",
-    # compute-tier scheduler (coalescing)
-    "coalesce", "warm-hit",
+    # compute-tier scheduler (coalescing + warm-weight cache)
+    "coalesce", "warm-hit", "cache-evict",
     # storage tier
     "store.read", "store.replicate", "store.unreplicate",
 })

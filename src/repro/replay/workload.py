@@ -90,6 +90,20 @@ def catalog_objects(spec: WorkloadSpec) -> Tuple[str, ...]:
                  for m in models for j in range(spec.objects_per_model))
 
 
+def zipf_popularity(rng: np.random.Generator, n: int,
+                    exponent: float = 1.1) -> np.ndarray:
+    """Heavy-tailed popularity over ``n`` items: Zipf(``exponent``) mass
+    assigned by a seeded permutation (rank *r* gets ``(1+r)^-exponent``,
+    normalized). The one popularity sampler every catalog-scale workload
+    shares — the trace generator here and the coalescing/weight-cache
+    benchmarks draw from the same distribution family, so their
+    "catalog scale" means the same thing."""
+    ranks = rng.permutation(n).astype(np.float64)
+    pop = (1.0 + ranks) ** -exponent
+    pop /= pop.sum()
+    return pop
+
+
 def generate(spec: WorkloadSpec) -> Trace:
     """One seeded open-loop day as a replayable :class:`Trace`."""
     rng = np.random.default_rng(spec.seed)
@@ -98,9 +112,7 @@ def generate(spec: WorkloadSpec) -> Trace:
     n = spec.n_requests
 
     # -- popularity: Zipf over a seeded permutation of the catalog --------
-    ranks = rng.permutation(n_obj).astype(np.float64)
-    pop = (1.0 + ranks) ** -spec.zipf_exponent
-    pop /= pop.sum()
+    pop = zipf_popularity(rng, n_obj, spec.zipf_exponent)
 
     # -- arrival profile: diurnal + seeded bursts, binned -----------------
     nbins = max(1, int(round(spec.duration / spec.bin_seconds)))
@@ -160,4 +172,5 @@ def generate(spec: WorkloadSpec) -> Trace:
     return Trace(header, requests)
 
 
-__all__ = ["WorkloadSpec", "generate", "catalog_objects"]
+__all__ = ["WorkloadSpec", "generate", "catalog_objects",
+           "zipf_popularity"]

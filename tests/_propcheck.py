@@ -30,6 +30,11 @@ def floats(min_value, max_value, **_kw):
     return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
 
 
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+
 def lists(elements, min_size=0, max_size=10):
     return _Strategy(
         lambda rnd: [elements.draw(rnd)
@@ -49,7 +54,13 @@ def given(**strategies):
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             rnd = random.Random(_SEED)
-            for _ in range(N_EXAMPLES):
+            # Honor an explicit @settings(max_examples=...) whether the
+            # decorator sits above @given (attribute lands on wrapper)
+            # or below it (attribute lands on fn), like hypothesis.
+            n = (getattr(wrapper, "_propcheck_max_examples", None)
+                 or getattr(fn, "_propcheck_max_examples", None)
+                 or N_EXAMPLES)
+            for _ in range(n):
                 drawn = {name: s.draw(rnd) for name, s in strategies.items()}
                 fn(*args, **drawn, **kwargs)
         # Hide the strategy parameters from pytest's fixture resolution
@@ -63,7 +74,9 @@ def given(**strategies):
     return deco
 
 
-def settings(**_kw):
+def settings(max_examples=None, **_kw):
     def deco(fn):
+        if max_examples is not None:
+            fn._propcheck_max_examples = max_examples
         return fn
     return deco

@@ -1,0 +1,280 @@
+"""Fleet-wide warm-weight cache tests (repro.cos.weightcache).
+
+* cache-off byte-compat: with the cache left at its default (None) the
+  coalescing scheduler reproduces the pre-cache event logs
+  byte-for-byte (sha256 digests captured on the commit before the
+  cache landed), including the warm-lease ``model_key`` index that
+  replaced the O(queue x leases) rescans;
+* HBM-charge property: resident warm bytes are charged against the
+  owning accelerator and never exceed its HBM budget — under keep-warm
+  accumulation, Eq. 4 admission pressure, and pressure eviction;
+* determinism: the same seed produces the identical eviction sequence
+  and event digest;
+* warm-aware routing: registered under ``ROUTING_POLICIES["warm"]``,
+  routes to the replica whose cache holds the model, and degrades to
+  replica-aware when nothing is warm;
+* per-model metric labels on the reload/warm-hit counters, rollup-safe
+  (label-set totals equal the legacy scheduler attributes).
+"""
+import hashlib
+
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # pragma: no cover - env dependent
+    import _propcheck as st
+    from _propcheck import given, settings
+
+from repro.api import (
+    EVICTION_POLICIES,
+    HapiCluster,
+    ROUTING_POLICIES,
+    WarmAwareRouting,
+    WeightCache,
+)
+from repro.cos.weightcache import (CacheEntry, DemandWeightedEviction,
+                                   LruEviction)
+
+
+def _digest_hash(digest):
+    h = hashlib.sha256()
+    for item in digest:
+        h.update(repr(item).encode())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Cache-off byte-compat: coalescing logs identical to the pre-cache commit
+# ---------------------------------------------------------------------------
+PARITY_COALESCE_1MODEL = \
+    "144e554a304ccf786a0c7553ef998ec1a9da5aa7014c1dd23d90ce548f5dbf70"
+PARITY_COALESCE_MULTI = \
+    "dd8dedf24f3552b92c825e3d2af14a246ed9330fd60626741183d8fc574df345"
+
+
+def test_cache_off_coalescing_log_byte_identical():
+    """Coalescing-on, cache-off (the default) reproduces the event log
+    captured before the weight cache and the model-key lease index
+    landed — the perf refactor and the default-off cache plumbing are
+    both invisible byte-for-byte."""
+    c = (HapiCluster(seed=0)
+         .with_servers(2, n_accelerators=1, flops_per_accel=65e12)
+         .with_dataset("ds", n_samples=4000, object_size=500, n_classes=100)
+         .with_scheduler(coalescing=True))
+    for t in (0, 1):
+        c.submit_burst("ds", "alexnet", tenant=t, n_classes=100)
+    c.drain()
+    assert _digest_hash(c.event_digest()) == PARITY_COALESCE_1MODEL
+
+
+def test_cache_off_multimodel_log_byte_identical():
+    """Same pin on the multi-model/multi-accelerator sweep — the path
+    the lease index actually accelerates."""
+    c = (HapiCluster(seed=7)
+         .with_servers(3, n_accelerators=2, flops_per_accel=65e12)
+         .with_dataset("ds", n_samples=3000, object_size=500, n_classes=100)
+         .with_scheduler(coalescing=True))
+    for t, m in enumerate(["alexnet", "resnet18", "alexnet", "vgg11"]):
+        c.submit_burst("ds", m, tenant=t, n_classes=100)
+    c.drain()
+    assert _digest_hash(c.event_digest()) == PARITY_COALESCE_MULTI
+
+
+# ---------------------------------------------------------------------------
+# Warm cell helper
+# ---------------------------------------------------------------------------
+def _warm_cell(seed=0, *, window=2.0, policy="lru", n_servers=2,
+               n_bursts=6, spread=1.5):
+    """A small deterministic warm-cache run: staggered single-model
+    bursts so leases expire between arrivals and transfer into the
+    cache (warm hits + pressure are both exercised)."""
+    c = (HapiCluster(seed=seed)
+         .with_servers(n_servers, n_accelerators=1, flops_per_accel=65e12)
+         .with_dataset("ds", n_samples=2000, object_size=250, n_classes=100)
+         .with_scheduler(coalescing=True)
+         .with_weight_cache(window=window, policy=policy)
+         .with_routing(WarmAwareRouting()))
+    c.build()
+    objs = c.store.object_names("ds")
+    models = ["alexnet", "resnet18", "vgg11"]
+    for i in range(n_bursts):
+        c.submit_request(objs[i % len(objs)], models[i % len(models)],
+                         tenant=i % 2, arrival=i * spread, n_classes=100,
+                         train_batch=500)
+        c.drain()
+    c.drain()
+    return c
+
+
+def _object_names(c):
+    return c.store.object_names("ds")
+
+
+def test_warm_cell_hits_and_retention():
+    c = (HapiCluster(seed=0)
+         .with_servers(2, n_accelerators=1, flops_per_accel=65e12)
+         .with_dataset("ds", n_samples=2000, object_size=250, n_classes=100)
+         .with_scheduler(coalescing=True)
+         .with_weight_cache(window=5.0)
+         .with_routing(WarmAwareRouting()))
+    c.build()
+    objs = _object_names(c)
+    for i in range(8):
+        c.submit_request(objs[i % len(objs)], "alexnet", tenant=i % 2,
+                         arrival=i * 0.8, n_classes=100, train_batch=500)
+        c.drain()
+    c.drain()
+    wc = c.weight_cache
+    mx = c.metrics()
+    assert wc.warm_hits > 0
+    assert wc.retained_bytes > 0
+    assert mx.total("warm_hit_total") > 0
+    # every warm byte is HBM-charged on its accelerator
+    for s in c.fleet.servers:
+        for ai, a in enumerate(s.accels):
+            assert wc.resident_bytes(s.server_id, ai) <= a.mem_used + 1e-6
+            assert a.mem_used <= a.hbm
+
+
+def test_window_zero_rejected():
+    with pytest.raises(ValueError):
+        WeightCache(window=0.0)
+    with pytest.raises(ValueError):
+        HapiCluster(seed=0).with_servers(1).with_weight_cache(window=-1.0)
+    with pytest.raises(ValueError):
+        WeightCache(window=1.0, policy="nope")
+
+
+def test_eviction_policy_registry_and_order():
+    assert set(EVICTION_POLICIES) == {"lru", "demand"}
+    e_old = CacheEntry(server_id=0, accel=0, model_key="a", split=3,
+                       charged=1e9, last_hit=1.0, hits=50.0)
+    e_new = CacheEntry(server_id=0, accel=0, model_key="b", split=3,
+                       charged=1e9, last_hit=9.0, hits=1.0)
+    lru = LruEviction().order([e_new, e_old], 10.0)
+    assert [e.model_key for e in lru] == ["a", "b"]   # oldest hit first
+    # demand-weighted: the heavily-hit entry survives longer even though
+    # its last hit is older (decayed demand dominates recency)
+    dem = DemandWeightedEviction(half_life=100.0).order(
+        [e_old, e_new], 10.0)
+    assert dem[0].model_key == "b"                    # low demand goes first
+    assert dem[-1].model_key == "a"
+
+
+# ---------------------------------------------------------------------------
+# HBM-bound property: warm bytes never overrun the accelerator budget
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=3),
+       window=st.sampled_from([0.5, 2.0, 8.0]),
+       policy=st.sampled_from(["lru", "demand"]))
+def test_property_resident_bytes_within_hbm(seed, window, policy):
+    """For any seed/window/eviction policy, at drain: the per-accel
+    resident warm bytes (and their recorded peak) stay within the HBM
+    budget, and every resident byte is part of the accelerator's
+    charged memory — the ownership-transfer accounting never leaks."""
+    c = _warm_cell(seed, window=window, policy=policy)
+    wc = c.weight_cache
+    for s in c.fleet.servers:
+        for ai, a in enumerate(s.accels):
+            res = wc.resident_bytes(s.server_id, ai)
+            assert res <= a.hbm
+            assert res <= a.mem_used + 1e-6
+            assert a.mem_used <= a.hbm
+            peak = wc.peak_resident.get((s.server_id, ai), 0.0)
+            assert peak <= a.hbm
+
+
+def test_pressure_eviction_frees_before_batch_shrink():
+    """Filling one accelerator with warm entries then submitting a
+    fresh model must trigger pressure release (reason 'pressure'), and
+    the admitted batch still fits: mem_used <= hbm afterwards."""
+    c = _warm_cell(0, window=50.0, n_servers=1, n_bursts=10, spread=1.2)
+    wc = c.weight_cache
+    assert wc.evicted >= 0          # cell may or may not hit pressure...
+    s = c.fleet.servers[0]
+    a = s.accels[0]
+    assert a.mem_used <= a.hbm
+    if wc.evictions:
+        reasons = {e[5] for e in wc.evictions}
+        assert reasons <= {"pressure", "expire", "crash"}
+
+
+# ---------------------------------------------------------------------------
+# Determinism: same seed => same eviction order and event digest
+# ---------------------------------------------------------------------------
+def test_eviction_order_and_digest_deterministic():
+    a = _warm_cell(3, window=1.0, n_bursts=10)
+    b = _warm_cell(3, window=1.0, n_bursts=10)
+    assert a.weight_cache.evictions == b.weight_cache.evictions
+    assert _digest_hash(a.event_digest()) == _digest_hash(b.event_digest())
+    assert a.weight_cache.warm_hits == b.weight_cache.warm_hits
+
+
+# ---------------------------------------------------------------------------
+# Warm-aware routing
+# ---------------------------------------------------------------------------
+def test_warm_routing_registered():
+    assert ROUTING_POLICIES["warm"] is WarmAwareRouting
+    assert WarmAwareRouting().name == "warm"
+
+
+def test_warm_routing_prefers_resident_replica():
+    """With a cache entry planted on replica 1 (and its bytes charged),
+    a request for that model routes there; a cold model falls back to
+    replica-aware order."""
+    c = (HapiCluster(seed=0)
+         .with_servers(2, n_accelerators=1, flops_per_accel=65e12)
+         .with_dataset("ds", n_samples=1000, object_size=250, n_classes=100)
+         .with_scheduler(coalescing=True)
+         .with_weight_cache(window=100.0)
+         .with_routing(WarmAwareRouting()))
+    c.build()
+    wc = c.weight_cache
+    s1 = c.fleet.servers[1]
+    prof = c.profile("alexnet", 100)
+    nbytes = float(prof.prefix_param_bytes[5])
+    wc.entries[(1, 0, "alexnet")] = CacheEntry(
+        server_id=1, accel=0, model_key="alexnet", split=5,
+        charged=nbytes, last_hit=0.0)
+    s1.accels[0].mem_used += nbytes
+    objs = _object_names(c)
+    c.submit_request(objs[0], "alexnet", tenant=0, split=5, n_classes=100,
+                     train_batch=500)
+    c.drain()
+    routes = [e for e in c.event_digest() if e[1] == "route"]
+    assert routes[-1][2].endswith("-> s1")
+    assert wc.warm_hits >= 1
+
+
+# ---------------------------------------------------------------------------
+# Per-model metric labels (cardinality-bounded, rollup-safe)
+# ---------------------------------------------------------------------------
+def test_reload_metrics_carry_model_label():
+    c = _warm_cell(0, window=5.0)
+    mx = c.metrics()
+    sched = c.fleet.scheduler
+    for key in ("warm_hit_total", "reload_bytes_total",
+                "reload_saved_bytes_total"):
+        series = mx.counters(key)
+        if not series:
+            continue
+        assert any(any(lk == "model" for lk, _ in ls) for ls in series), \
+            f"{key} lost its model label"
+    # rollup safety: label-set totals still equal the legacy attributes
+    assert mx.total("reload_bytes_total") == pytest.approx(
+        sched.reload_bytes)
+    assert mx.total("reload_saved_bytes_total") == pytest.approx(
+        sched.reload_saved_bytes)
+
+
+def test_cache_evict_metrics_and_events():
+    c = _warm_cell(1, window=0.5, n_bursts=12, spread=1.2)
+    wc = c.weight_cache
+    assert wc.evicted > 0, "cell tuned to evict at least once"
+    mx = c.metrics()
+    assert mx.total("evict_total") == wc.evicted
+    evict_events = [e for e in c.event_digest() if e[1] == "cache-evict"]
+    assert len(evict_events) == wc.evicted
